@@ -1,0 +1,58 @@
+"""Benchmark driver: ``PYTHONPATH=src python -m benchmarks.run [--suite S]``.
+
+Suites:
+  kernels  — Pallas kernel accounting + interpret-mode sanity timings
+  roofline — §Roofline table from experiments/dryrun artifacts
+  tables   — paper Tables 1/2/3/4 + Fig 1 reproductions (synthetic corpus)
+  all      — everything above (default: kernels+roofline; tables behind
+             --with-tables since the SSL pipeline takes ~10 min)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default="default",
+                    choices=["default", "kernels", "roofline", "tables",
+                             "all"])
+    ap.add_argument("--out", default="experiments/benchmarks")
+    ap.add_argument("--scale", default="tiny")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    ran = []
+    if args.suite in ("default", "kernels", "all"):
+        from benchmarks import kernels_bench
+        out = kernels_bench.run(args.out)
+        print("== kernels ==")
+        for k, v in out.items():
+            print(f"  {k}: {json.dumps(v)}")
+        ran.append("kernels")
+
+    if args.suite in ("default", "roofline", "all"):
+        from benchmarks import roofline
+        try:
+            rows, table = roofline.run(out_dir=args.out)
+            print("== roofline (single-pod) ==")
+            print(table)
+            ran.append("roofline")
+        except Exception as e:
+            print(f"roofline skipped (run launch/dryrun first): {e}")
+
+    if args.suite in ("tables", "all"):
+        from benchmarks import tables
+        out = tables.run(args.out, scale=args.scale)
+        print("== paper tables ==")
+        print(json.dumps(out, indent=1, default=float))
+        ran.append("tables")
+
+    print(f"\nbenchmarks done ({', '.join(ran)}) in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

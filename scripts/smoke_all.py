@@ -1,0 +1,44 @@
+"""Dev script: reduced-config forward + train step for every arch on CPU."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_arch, reduced
+from repro.models import build_model
+from repro.models.api import input_specs
+from repro.configs.base import ShapeConfig
+from repro.launch.steps import make_train_step, init_opt_state
+
+SMOKE_SHAPE = ShapeConfig("smoke", seq_len=64, global_batch=2, kind="train")
+
+
+def concrete(spec_tree, key):
+    def mk(s):
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            return jnp.zeros(s.shape, s.dtype)
+        return jnp.ones(s.shape, s.dtype) * 0.01
+    return jax.tree_util.tree_map(mk, spec_tree)
+
+
+fails = []
+for name in ARCHS:
+    try:
+        cfg = reduced(get_arch(name))
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        batch = concrete(input_specs(cfg, SMOKE_SHAPE), None)
+        step = jax.jit(make_train_step(model, cfg, loss_kind="ce"))
+        opt = init_opt_state(params)
+        params2, opt2, metrics = step(params, opt, batch)
+        loss = float(metrics["loss"])
+        assert jnp.isfinite(loss), f"loss not finite: {loss}"
+        print(f"OK   {name:24s} loss={loss:.4f}")
+    except Exception as e:
+        fails.append(name)
+        import traceback
+        print(f"FAIL {name}: {type(e).__name__}: {e}")
+        traceback.print_exc(limit=6)
+
+print("FAILS:", fails)
+sys.exit(1 if fails else 0)

@@ -1,0 +1,44 @@
+"""Dev script: reduced-config prefill + decode step for every decodable arch."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_arch, reduced, supports
+from repro.configs.base import ShapeConfig
+from repro.models import build_model
+from repro.launch.steps import make_serve_step, make_prefill_step
+
+SHAPE = ShapeConfig("smoke-dec", seq_len=32, global_batch=2, kind="decode")
+
+fails = []
+for name in ARCHS:
+    cfg0 = get_arch(name)
+    ok, why = supports(cfg0, SHAPE)
+    if cfg0.family == "lstm_am":
+        print(f"SKIP {name}: {why}")
+        continue
+    try:
+        cfg = reduced(cfg0)
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        cache = model.init_cache(2, 32, jnp.bfloat16)
+        serve = jax.jit(make_serve_step(model, cfg))
+        toks = jnp.array([[1], [2]], jnp.int32)
+        for i in range(3):
+            toks, logits, cache = serve(params, cache, toks)
+        assert jnp.all(jnp.isfinite(logits)), "non-finite logits"
+        # prefill
+        if cfg.encoder is None:
+            pre = jax.jit(make_prefill_step(model, cfg))
+            out = pre(params, {"tokens": jnp.zeros((2, 32), jnp.int32)})
+            assert jnp.all(jnp.isfinite(out))
+        print(f"OK   {name:24s} next={toks.ravel().tolist()}")
+    except Exception as e:
+        fails.append(name)
+        import traceback
+        print(f"FAIL {name}: {type(e).__name__}: {e}")
+        traceback.print_exc(limit=8)
+
+print("FAILS:", fails)
+sys.exit(1 if fails else 0)

@@ -1,0 +1,3 @@
+from repro.checkpoint.store import CheckpointStore, load_tree, save_tree
+
+__all__ = ["CheckpointStore", "save_tree", "load_tree"]

@@ -1,0 +1,98 @@
+"""Checkpointing: flat-key npz store for arbitrary pytrees + step metadata.
+
+Path-keyed (same path strings as repro.utils.trees), so checkpoints are
+robust to container-type changes and partially loadable (e.g. restoring a
+teacher's params into a student-shaped tree for distillation init).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.trees import tree_paths
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    out = {}
+    for p, x in tree_paths(tree):
+        a = np.asarray(jax.device_get(x))
+        if a.dtype == jnp.bfloat16:       # npz has no bf16: store f32,
+            a = a.astype(np.float32)      # load_tree casts back via template
+        out[p] = a
+    return out
+
+
+def save_tree(path: str, tree, *, meta: Optional[dict] = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path, **{f"t::{k}": v for k, v in flat.items()})
+    if meta is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(meta, f)
+
+
+def load_tree(path: str, like) -> Any:
+    """Restore into the structure of `like` (params-shaped template)."""
+    z = np.load(path if path.endswith(".npz") else path + ".npz")
+    stored = {k[3:]: z[k] for k in z.files if k.startswith("t::")}
+    flat, treedef = jax.tree_util.tree_flatten(like)
+    paths = [p for p, _ in tree_paths(like)]
+    out = []
+    for p, template in zip(paths, flat):
+        if p not in stored:
+            raise KeyError(f"checkpoint missing leaf {p!r}")
+        arr = stored[p]
+        if tuple(arr.shape) != tuple(template.shape):
+            raise ValueError(f"shape mismatch at {p}: ckpt {arr.shape} "
+                             f"vs template {template.shape}")
+        out.append(jnp.asarray(arr, template.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class CheckpointStore:
+    """<root>/step_<n>.npz rolling store with retention."""
+
+    def __init__(self, root: str, *, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+
+    def path(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:08d}.npz")
+
+    def save(self, step: int, tree, *, meta: Optional[dict] = None):
+        save_tree(self.path(step), tree, meta={"step": step,
+                                               **(meta or {})})
+        self._gc()
+
+    def steps(self):
+        out = []
+        for f in os.listdir(self.root):
+            m = re.match(r"step_(\d+)\.npz$", f)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def load(self, like, step: Optional[int] = None):
+        step = self.latest() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        return load_tree(self.path(step), like), step
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: -self.keep]:
+            os.remove(self.path(s))
+            meta = self.path(s) + ".meta.json"
+            if os.path.exists(meta):
+                os.remove(meta)

@@ -1,0 +1,3 @@
+from repro.core import distill, logit_store, scheduled, teacher
+
+__all__ = ["distill", "logit_store", "scheduled", "teacher"]

@@ -1,0 +1,107 @@
+"""Top-k logit store (paper §3.2.2).
+
+"To reduce bandwidth and storage requirements as we parallelize across
+multiple GPUs, we store only the k highest valued logits. ... We found
+storing the top-20 values for k to be sufficient."
+
+The store is a sharded on-disk archive of (values bf16, indices int32)
+pairs per frame, written by the teacher target-generation pass and read by
+the student trainer.  ``topk_compress`` / ``reconstruct`` are the in-memory
+codecs; ``repro.kernels.topk_logits`` is the Pallas TPU kernel for the
+selection hot loop.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distill import NEG_FILL
+
+
+def topk_compress(logits, k: int):
+    """logits (..., V) -> (vals (..., k) bf16, idx (..., k) int32).
+
+    Values are stored *shifted* so that the max logit is 0 — softmax is
+    shift-invariant and bf16 precision concentrates near 0 (storage trick:
+    keeps 8-bit-exponent error negligible for the dominant mass).
+    """
+    vals, idx = jax.lax.top_k(logits.astype(jnp.float32), k)
+    vals = vals - vals[..., :1]
+    return vals.astype(jnp.bfloat16), idx.astype(jnp.int32)
+
+
+def reconstruct(vals, idx, vocab: int):
+    """Lossy reconstruction: missing logits filled with NEG_FILL."""
+    shape = vals.shape[:-1] + (vocab,)
+    canvas = jnp.full((int(np.prod(shape[:-1])), vocab), NEG_FILL,
+                      jnp.float32)
+    flat_v = vals.reshape(-1, vals.shape[-1]).astype(jnp.float32)
+    flat_i = idx.reshape(-1, idx.shape[-1])
+    canvas = jax.vmap(lambda c, i, v: c.at[i].set(v))(canvas, flat_i, flat_v)
+    return canvas.reshape(shape)
+
+
+def storage_bytes_per_frame(k: int) -> int:
+    return k * (2 + 4)          # bf16 value + int32 index
+
+
+def full_bytes_per_frame(vocab: int) -> int:
+    return vocab * 4
+
+
+@dataclass
+class ShardMeta:
+    n_frames: int
+    k: int
+    vocab: int
+
+
+class LogitStore:
+    """Directory of npz shards: one shard per (worker, sub-epoch chunk).
+
+    Layout: <root>/shard_<i>.npz {vals, idx, utt_lens} + meta.json.
+    Writes happen from the teacher inference pass (parallelized over
+    workers — the paper's 'parallelize target generation'); reads stream
+    shards in worker-local order for the student trainer.
+    """
+
+    def __init__(self, root: str, *, k: int = 20, vocab: int = 0):
+        self.root = root
+        self.k = k
+        self.vocab = vocab
+        os.makedirs(root, exist_ok=True)
+
+    def write_shard(self, shard_id: int, vals, idx, utt_lens=None):
+        vals = np.asarray(jax.device_get(vals), dtype=np.float32)
+        idx = np.asarray(jax.device_get(idx), dtype=np.int32)
+        path = os.path.join(self.root, f"shard_{shard_id:05d}.npz")
+        np.savez_compressed(
+            path, vals=vals.astype(np.float16), idx=idx,
+            utt_lens=np.asarray(utt_lens if utt_lens is not None else
+                                [vals.shape[0]], np.int32))
+        meta = {"k": self.k, "vocab": self.vocab}
+        with open(os.path.join(self.root, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        return path
+
+    def read_shard(self, shard_id: int):
+        path = os.path.join(self.root, f"shard_{shard_id:05d}.npz")
+        z = np.load(path)
+        return (jnp.asarray(z["vals"], jnp.bfloat16),
+                jnp.asarray(z["idx"], jnp.int32))
+
+    def shards(self):
+        return sorted(f for f in os.listdir(self.root)
+                      if f.startswith("shard_"))
+
+    def stats(self):
+        n = 0
+        for s in self.shards():
+            z = np.load(os.path.join(self.root, s))
+            n += int(np.prod(z["idx"].shape[:-1]))
+        return ShardMeta(n_frames=n, k=self.k, vocab=self.vocab)

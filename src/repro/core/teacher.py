@@ -1,0 +1,62 @@
+"""Teacher-side target generation (paper §3.1-3.2).
+
+The teacher (bidirectional LSTM for the AM; any built model for LLM archs)
+runs inference over unlabeled batches and emits top-k logits into the
+LogitStore.  Generation is embarrassingly parallel over workers — exactly
+the property the paper engineered for ("parallelize target generation"):
+no decoder, no confidence model, no LM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import logit_store as ls
+from repro.models import build_model
+
+
+class TeacherRunner:
+    def __init__(self, cfg, params, *, k: int = 20, temperature: float = 1.0):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.k = k
+        self.temperature = temperature
+        self._fwd = jax.jit(self._forward)
+
+    def _forward(self, params, batch):
+        if self.cfg.family == "lstm_am":
+            h, _ = self.model.apply(params, batch["feats"])
+        elif self.cfg.encoder is not None:
+            h, _ = self.model.apply(params, batch["tokens"],
+                                    enc_embeds=batch["enc_embeds"])
+        else:
+            h, _ = self.model.apply(params, batch["tokens"])
+        logits = self.model.unembed(params, h) / self.temperature
+        return ls.topk_compress(logits, self.k)
+
+    def generate(self, batch):
+        """-> (vals (B,S,k) bf16, idx (B,S,k) int32)."""
+        return self._fwd(self.params, batch)
+
+    def generate_to_store(self, store: ls.LogitStore, batches,
+                          shard_offset: int = 0):
+        paths = []
+        for i, batch in enumerate(batches):
+            vals, idx = self.generate(batch)
+            paths.append(store.write_shard(shard_offset + i, vals, idx))
+        return paths
+
+
+def make_teacher_config(student_cfg):
+    """The paper's teacher: same depth/width but bidirectional (AM case).
+    For token LMs the teacher is the same architecture (optionally deeper);
+    we default to identical topology — the SSL machinery is agnostic."""
+    if student_cfg.family == "lstm_am":
+        from repro.configs.lstm_am_7khr import TEACHER
+        return TEACHER.replace(
+            lstm_hidden=student_cfg.lstm_hidden,
+            n_senones=student_cfg.n_senones,
+            feat_dim=student_cfg.feat_dim,
+            vocab_size=student_cfg.vocab_size)
+    return student_cfg

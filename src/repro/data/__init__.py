@@ -1,0 +1,10 @@
+from repro.data.synthetic import SynthConfig, Utterance, synth_corpus, synth_utterance
+from repro.data.features import FeatureConfig, featurize, featurize_utterance
+from repro.data.chunking import chunk_utterances, pad_batch
+from repro.data.loader import CorpusLoader, speaker_hash
+
+__all__ = [
+    "SynthConfig", "Utterance", "synth_corpus", "synth_utterance",
+    "FeatureConfig", "featurize", "featurize_utterance",
+    "chunk_utterances", "pad_batch", "CorpusLoader", "speaker_hash",
+]

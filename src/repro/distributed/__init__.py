@@ -1,0 +1,3 @@
+from repro.distributed import bmuf, gtc, sharding
+
+__all__ = ["bmuf", "gtc", "sharding"]

@@ -1,0 +1,198 @@
+"""Role-based 2D sharding policy ("FSDP+TP").
+
+Mesh axes: ``("data", "model")`` single-pod (16,16) or
+``("pod", "data", "model")`` multi-pod (2,16,16).  The batch and the FSDP
+param dim shard over (pod,data); the tensor-parallel dim over model.  MoE
+expert dims shard over model (expert parallelism).  Every assignment is
+divisibility-checked against the actual mesh; non-divisible dims degrade
+gracefully (fewer axes -> replicated) so the same rules serve the reduced
+smoke configs on 1 device and the production mesh.
+"""
+from __future__ import annotations
+
+import re
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# param leaves under these path fragments carry a leading scan/stack dim
+STACKED = re.compile(r"(seg\d+|enc_blocks|dec_blocks|mtp/block)")
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        return int(np.prod([_axis_size(mesh, n) for n in name]))
+    return mesh.shape[name]
+
+
+def _fit(dim: int, candidates, mesh: Mesh):
+    """First candidate axis (or axis tuple) that divides dim; else None."""
+    for cand in candidates:
+        if cand is None:
+            return None
+        if dim % _axis_size(mesh, cand) == 0:
+            return cand
+    return None
+
+
+def fsdp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def all_axes(mesh: Mesh):
+    return tuple(mesh.axis_names)
+
+
+def batch_spec(mesh: Mesh, batch: int, extra_dims: int = 1,
+               mode: str = "fsdp_tp") -> P:
+    """Shard the batch dim: (pod,data) for 2D FSDP+TP; every axis for
+    pure-FSDP (ZeRO-3) where all chips are data-parallel."""
+    if mode == "fsdp":
+        aa = all_axes(mesh)
+        cand = _fit(batch, [aa, aa[1:], aa[-1:], None], mesh)
+    else:
+        fa = fsdp_axes(mesh)
+        cand = _fit(batch, [fa, fa[-1:], None], mesh)
+    return P(cand, *([None] * extra_dims))
+
+
+def param_spec(path: str, shape, mesh: Mesh, *, mode: str = "fsdp_tp") -> P:
+    """PartitionSpec for one param leaf, by role.
+
+    mode "fsdp_tp": 2D policy (default, training).
+    mode "tp": tensor-parallel only — params replicated over (pod, data),
+    sharded over model.  For inference steps this removes every per-layer
+    param all-gather (each chip holds its TP shard permanently); the cost
+    is params/model_axis bytes of HBM per chip, which fits every assigned
+    arch at 16-way TP.  See EXPERIMENTS.md §Perf (gemma3 prefill).
+    mode "fsdp": pure ZeRO-3 — every chip data-parallel, each weight's
+    largest shardable dim split over ALL mesh axes, no tensor parallelism.
+    Removes the per-layer TP activation all-reduces that dominate the
+    train-shape collective term (§Perf gemma3 train_4k); collective volume
+    becomes ~3x param bytes (weight all-gather fwd/bwd + grad
+    reduce-scatter).
+    """
+    if mode == "fsdp":
+        return _fsdp_only_spec(path, shape, mesh)
+    fa = fsdp_axes(mesh) if mode == "fsdp_tp" else ()
+    name = path.split("/")[-1]
+    dims = list(shape)
+    lead = []
+    if STACKED.search(path):
+        lead = [None]                            # scan/stack dim replicated
+        dims = dims[1:]
+
+    def spec(*assign):
+        out = []
+        for d, cands in zip(dims, assign):
+            out.append(_fit(d, list(cands) + [None], mesh))
+        return P(*lead, *out)
+
+    nd = len(dims)
+    FS = (tuple(fa), fa[-1]) if fa else (None,)  # fsdp candidates
+    MD = ("model",)
+
+    if nd == 0:
+        return P(*lead)
+    if nd == 1:
+        # vectors: shard over model if divisible (biases over TP'd dims)
+        if name in ("b", "bq", "bk", "bv", "b_if", "scale", "bias",
+                    "q_norm", "k_norm", "lam", "gn"):
+            return P(*lead, None)
+        return spec(MD)
+    if nd == 3 and name in ("w_gate", "w_up"):   # MoE (E, D, F)
+        return spec(MD, FS, ())
+    if nd == 3 and name == "w_down":             # MoE (E, F, D)
+        return spec(MD, (), FS)
+    if nd == 3 and name == "rh":                 # sLSTM (H, hd, 4hd)
+        return spec((), FS, MD)
+    if nd == 2:
+        if name == "embed":                      # (V, D)
+            return spec(MD, FS)
+        if name in ("out",):                     # (D, V)
+            return spec(FS, MD)
+        if name in ("pos", "enc_pos", "dec_pos"):
+            return spec((), MD)
+        if name == "conv":                       # (K, W)
+            return spec((), MD)
+        if name in ("wo", "w_out", "down", "w_down"):   # (TP_in, D)
+            return spec(MD, FS)
+        # default projection: (D_in, TP_out)
+        return spec(FS, MD)
+    # fallback: shard the largest dim over model if possible
+    big = int(np.argmax(dims))
+    assign = [() for _ in dims]
+    assign[big] = MD
+    return spec(*assign)
+
+
+def _fsdp_only_spec(path: str, shape, mesh: Mesh) -> P:
+    """ZeRO-3: shard each weight's largest shardable dim over all axes
+    (falling back to fewer axes, then replication); vectors replicated."""
+    aa = all_axes(mesh)
+    dims = list(shape)
+    lead = []
+    if STACKED.search(path):
+        lead = [None]
+        dims = dims[1:]
+    if len(dims) < 2:
+        return P(*lead, *([None] * len(dims)))
+    order = sorted(range(len(dims)), key=lambda i: -dims[i])
+    out = [None] * len(dims)
+    for i in order:
+        cand = _fit(dims[i], [aa, aa[1:], aa[-1:], None], mesh)
+        if cand is not None:
+            out[i] = cand
+            break
+    return P(*lead, *out)
+
+
+def cache_spec(path: str, shape, mesh: Mesh) -> P:
+    """KV caches / recurrent states: batch over fsdp, heads (or channels)
+    over model, seq dims replicated (decode writes at a dynamic index)."""
+    fa = fsdp_axes(mesh)
+    name = path.split("/")[-1]
+    dims = list(shape)
+    if name == "pos" or not dims:
+        return P()
+    lead = []
+    # scanned-segment caches (transformer) and whisper's stacked layer caches
+    # carry a leading repeat/layer dim
+    if path.startswith("seg") or "/seg" in path \
+            or (name in ("k", "v", "ck", "cv") and len(dims) == 5):
+        lead = [None]
+        dims = dims[1:]
+
+    def fit_b(d):
+        return _fit(d, [tuple(fa), fa[-1], None], mesh)
+
+    if name in ("k", "v", "ck", "cv"):           # (B, H, S, hd)
+        b, h, s, hd = dims
+        h_ax = _fit(h, [("model",), None], mesh)
+        hd_ax = None if h_ax else _fit(hd, [("model",), None], mesh)
+        return P(*lead, fit_b(b), h_ax, None, hd_ax)
+    # recurrent states / MLA latents: batch over fsdp, last dim over model
+    out = [fit_b(dims[0])] + [None] * (len(dims) - 1)
+    if len(dims) >= 2:
+        out[-1] = _fit(dims[-1], [("model",), None], mesh)
+    return P(*lead, *out)
+
+
+def tree_param_specs(abstract_params, mesh: Mesh, *, mode: str = "fsdp_tp"):
+    from repro.utils.trees import map_with_path
+    return map_with_path(lambda p, a: param_spec(p, a.shape, mesh,
+                                                 mode=mode),
+                         abstract_params)
+
+
+def tree_cache_specs(abstract_cache, mesh: Mesh):
+    from repro.utils.trees import map_with_path
+    return map_with_path(lambda p, a: cache_spec(p, a.shape, mesh),
+                         abstract_cache)
+
+
+def shardings(tree_specs, mesh: Mesh):
+    import jax
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                  tree_specs,
+                                  is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,29 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd public wrapper), ref.py (pure-jnp oracle).  All validated
+in interpret=True mode on CPU; `interpret=False` is the TPU path.
+
+  topk_logits   — teacher target generation: top-k=20 over senone/token
+                  vocab via k-round max-extraction on VMEM tiles (§3.2.2)
+  sparse_ce     — student loss: fused full-vocab logsumexp + teacher-index
+                  gather streaming (D,Vt) unembedding tiles (§3.2.2)
+  swa_attention — banded flash attention whose *grid* skips out-of-window
+                  kv blocks (long_500k path for SWA archs)
+  gtc_compress  — error-feedback threshold sparsification, fused
+                  elementwise pass (§3.5 / Strom 2015)
+"""
+from repro.kernels.gtc_compress import gtc_compress, gtc_compress_ref
+from repro.kernels.sparse_ce import (sparse_ce_lse_gather,
+                                     sparse_ce_lse_gather_ref,
+                                     topk_distill_ce, topk_distill_ce_ref)
+from repro.kernels.swa_attention import swa_attention, swa_attention_ref
+from repro.kernels.topk_logits import topk_logits, topk_logits_ref
+
+__all__ = [
+    "gtc_compress", "gtc_compress_ref",
+    "sparse_ce_lse_gather", "sparse_ce_lse_gather_ref",
+    "topk_distill_ce", "topk_distill_ce_ref",
+    "swa_attention", "swa_attention_ref",
+    "topk_logits", "topk_logits_ref",
+]

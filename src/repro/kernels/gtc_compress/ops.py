@@ -1,0 +1,26 @@
+"""jit'd public wrapper: pad-to-tile + reshape around the Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gtc_compress.kernel import TILE, gtc_compress_flat
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gtc_compress(grad, residual, tau, *, interpret: bool = True):
+    """Tensor-shaped GTC compression via the TPU kernel.
+
+    grad/residual: same shape, any dims; tau: python float or 0-d array.
+    Returns (send, new_residual) shaped like grad, float32.
+    """
+    shape = grad.shape
+    n = grad.size
+    npad = (-n) % TILE
+    g = jnp.pad(grad.reshape(-1).astype(jnp.float32), (0, npad))
+    r = jnp.pad(residual.reshape(-1).astype(jnp.float32), (0, npad))
+    t = jnp.asarray([tau], jnp.float32)
+    send, newr = gtc_compress_flat(g, r, t, interpret=interpret)
+    return send[:n].reshape(shape), newr[:n].reshape(shape)

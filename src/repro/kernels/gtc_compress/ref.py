@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the GTC threshold-compression kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gtc_compress_ref(grad, residual, tau):
+    """(send, new_residual): error-feedback threshold sparsification.
+
+    acc  = residual + grad
+    send = tau * sign(acc) * [|acc| > tau]
+    new_residual = acc - send
+    """
+    acc = residual.astype(jnp.float32) + grad.astype(jnp.float32)
+    mask = jnp.abs(acc) > tau
+    send = jnp.where(mask, jnp.sign(acc) * tau, 0.0).astype(jnp.float32)
+    return send, acc - send

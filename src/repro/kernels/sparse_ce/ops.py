@@ -1,0 +1,44 @@
+"""Public wrappers: padding + the distill-CE loss built on the kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sparse_ce.kernel import sparse_ce_tiles
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret",
+                                             "v_tile"))
+def sparse_ce_lse_gather(h, w, idx, *, softcap: float = 0.0,
+                         v_tile: int = 1024, interpret: bool = True):
+    """h (T,D), w (D,V), idx (T,K) -> (lse (T,), gathered (T,K)) f32.
+
+    Pads T to the 128-row tile and V to the vocab tile; padding rows cost
+    compute but never flow back (caller slices).  For D > 8192 chunk D
+    upstream (none of the assigned archs need it: max d_model is 8192).
+    """
+    t, d = h.shape
+    v = w.shape[1]
+    t_tile = 128 if t >= 128 else max(8, 1 << (t - 1).bit_length())
+    vt = min(v_tile, 1 << (v - 1).bit_length())
+    vt = max(vt, 128)
+    tp, vp = (-t) % t_tile, (-v) % vt
+    hp = jnp.pad(h, ((0, tp), (0, 0)))
+    wp = jnp.pad(w, ((0, 0), (0, vp)))
+    ip = jnp.pad(idx.astype(jnp.int32), ((0, tp), (0, 0)))
+    lse, g = sparse_ce_tiles(hp, wp, ip, t_tile=t_tile, v_tile=vt,
+                             softcap=softcap, interpret=interpret,
+                             v_total=v)
+    return lse[:t, 0], g[:t]
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def topk_distill_ce(h, w, topk_vals, topk_idx, *, softcap: float = 0.0,
+                    interpret: bool = True):
+    """The paper's SSL loss, fused-kernel path.  h (T,D) flat frames."""
+    lse, z = sparse_ce_lse_gather(h, w, topk_idx, softcap=softcap,
+                                  interpret=interpret)
+    q = jax.nn.softmax(topk_vals.astype(jnp.float32), axis=-1)
+    return jnp.mean(jnp.sum(q * (lse[:, None] - z), axis=-1))

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused (logsumexp + top-k gather) inner loop."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sparse_ce_lse_gather_ref(h, w, idx, *, softcap: float = 0.0):
+    """h (T,D), w (D,V), idx (T,K) -> (lse (T,), gathered (T,K)) f32.
+
+    Full-logit reference: materializes (T,V) once — the thing the kernel
+    exists to avoid.
+    """
+    logits = (h.astype(jnp.float32) @ w.astype(jnp.float32))
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gathered = jnp.take_along_axis(logits, idx, axis=-1)
+    return lse, gathered
+
+
+def topk_distill_ce_ref(h, w, topk_vals, topk_idx, *, softcap: float = 0.0):
+    """Paper SSL loss from the fused primitive (reference path)."""
+    lse, z = sparse_ce_lse_gather_ref(h, w, topk_idx, softcap=softcap)
+    q = jax.nn.softmax(topk_vals.astype(jnp.float32), axis=-1)
+    return jnp.mean(jnp.sum(q * (lse[:, None] - z), axis=-1))

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: causal sliding-window flash attention.
+
+The long_500k shape lives or dies on this kernel: S=524,288 with window
+W=4096 must cost O(S*W), never O(S^2).  The banded structure is expressed
+*in the grid*, not in a mask over dead blocks: grid =
+(B*H, S/Tq, n_kv_band) where n_kv_band = W/Tk + 1 covers exactly the
+[qi*Tq - W, qi*Tq + Tq) key band of one query tile.  Blocks wholly outside
+the band are never fetched from HBM — this is the "masked blocks still
+execute" waste (DESIGN.md §5) going away; XLA's dense flash scan can't
+skip them because its mask is data, not schedule.
+
+kv tiles enter via BlockSpec index_map (qi - W/Tk + kj), clamped at 0;
+out-of-range contributions are killed by the position mask (a clamped
+duplicate fetch of block 0 is masked — same trick as JAX's own
+splash-attention).  Online-softmax state (m, l, acc) lives in VMEM
+scratch across the kv-band grid steps; MXU does the two (Tq,hd)x(hd,Tk)
+matmuls per step; hd is padded to 128 lanes upstream.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, a_sc, *,
+            t_q: int, t_kv: int, window: int, band_blocks: int, n_band: int,
+            scale: float, softcap: float):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc[...], NEG)
+        l_sc[...] = jnp.zeros_like(l_sc[...])
+        a_sc[...] = jnp.zeros_like(a_sc[...])
+
+    # absolute positions of this (q-tile, kv-tile) pair; negative raw block
+    # ids clamp to 0 in the BlockSpec (a duplicate fetch) — the `raw >= 0`
+    # mask term kills those steps so block 0 is counted exactly once
+    raw = qi * (t_q // t_kv) - band_blocks + kj
+    kv_block = jnp.maximum(raw, 0)
+    q_pos = qi * t_q + jax.lax.broadcasted_iota(jnp.int32, (t_q, t_kv), 0)
+    k_pos = kv_block * t_kv + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (t_q, t_kv), 1)
+
+    q = q_ref[0].astype(jnp.float32)                     # (Tq, hd)
+    k = k_ref[0].astype(jnp.float32)                     # (Tk, hd)
+    v = v_ref[0].astype(jnp.float32)                     # (Tk, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            precision=jax.lax.Precision.HIGHEST) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    mask = (k_pos <= q_pos) & (q_pos - k_pos < window) & (raw >= 0)
+    s = jnp.where(mask, s, NEG)
+
+    m_old = m_sc[...]                                    # (Tq, 1)
+    m_new = jnp.maximum(m_old, s.max(axis=1, keepdims=True))
+    corr = jnp.exp(m_old - m_new)
+    p = jnp.exp(s - m_new)
+    l_sc[...] = l_sc[...] * corr + p.sum(axis=1, keepdims=True)
+    a_sc[...] = a_sc[...] * corr + jax.lax.dot(
+        p.astype(jnp.float32), v, precision=jax.lax.Precision.HIGHEST)
+    m_sc[...] = m_new
+
+    @pl.when(kj == n_band - 1)
+    def _finish():
+        o_ref[0] = (a_sc[...] / jnp.maximum(l_sc[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "t_q", "t_kv",
+                                             "softcap", "interpret"))
+def swa_attention_tiles(q, k, v, *, window: int, t_q: int = 128,
+                        t_kv: int = 128, softcap: float = 0.0,
+                        interpret: bool = False):
+    """q/k/v (BH, S, hd): S % t_q == 0, t_q % t_kv == 0.  ``window`` is the
+    exact mask width; the fetched band rounds it up to whole kv tiles.
+
+    Returns (BH, S, hd) f32.
+    """
+    bh, s, hd = q.shape
+    assert t_q % t_kv == 0 and s % t_q == 0
+    n_q = s // t_q
+    band_blocks = -(-window // t_kv)          # ceil: fetched, mask trims
+    n_band = band_blocks + t_q // t_kv        # band + the diagonal tiles
+    scale = 1.0 / np.sqrt(hd)
+
+    def kv_index(b, qi, kj):
+        return (b, jnp.maximum(qi * (t_q // t_kv) - band_blocks + kj, 0), 0)
+
+    kern = functools.partial(_kernel, t_q=t_q, t_kv=t_kv, window=window,
+                             band_blocks=band_blocks, n_band=n_band,
+                             scale=scale, softcap=softcap)
+    out = pl.pallas_call(
+        kern,
+        grid=(bh, n_q, n_band),
+        in_specs=[
+            pl.BlockSpec((1, t_q, hd), lambda b, qi, kj: (b, qi, 0)),
+            pl.BlockSpec((1, t_kv, hd), kv_index),
+            pl.BlockSpec((1, t_kv, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, t_q, hd), lambda b, qi, kj: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((t_q, 1), jnp.float32),
+            pltpu.VMEM((t_q, 1), jnp.float32),
+            pltpu.VMEM((t_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out

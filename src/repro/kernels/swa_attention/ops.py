@@ -1,0 +1,42 @@
+"""Public wrapper: GQA head broadcast, padding, tile-size selection."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.swa_attention.kernel import swa_attention_tiles
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap",
+                                             "interpret"))
+def swa_attention(q, k, v, window: int, *, softcap: float = 0.0,
+                  interpret: bool = True):
+    """q (B,Hq,S,hd); k/v (B,Hkv,S,hd), Hq % Hkv == 0.  Causal + window.
+
+    Returns (B,Hq,S,hd) f32.  Pads S to the query tile and hd to 128
+    lanes; GQA is realized by broadcasting kv heads (the kernel is
+    bandwidth-bound on kv tiles either way).
+    """
+    b, hq, s, hd = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    t_q = 128 if s >= 128 else max(8, 1 << (s - 1).bit_length())
+    t_kv = min(128, t_q)
+    sp = (-s) % t_q
+    hdp = (-hd) % 128 if hd >= 128 else (128 - hd)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sp), (0, hdp)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, sp), (0, hdp)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, sp), (0, hdp)))
+    qf = qp.reshape(b * hq, s + sp, hd + hdp)
+    # padded hd inflates 1/sqrt(hd); rescale q to compensate
+    qf = qf * jnp.asarray(((hd + hdp) / hd) ** 0.5, qf.dtype)
+    kf = kp.reshape(b * hq, s + sp, hd + hdp)
+    vf = vp.reshape(b * hq, s + sp, hd + hdp)
+    o = swa_attention_tiles(qf, kf, vf, window=window, t_q=t_q, t_kv=t_kv,
+                            softcap=softcap, interpret=interpret)
+    return o.reshape(b, hq, s + sp, hd + hdp)[:, :, :s, :hd]

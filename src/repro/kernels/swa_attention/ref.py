@@ -1,0 +1,28 @@
+"""Pure-jnp oracle: causal sliding-window attention, full (S,S) mask."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG = -1e30
+
+
+def swa_attention_ref(q, k, v, window: int, *, softcap: float = 0.0):
+    """q (B,H,S,hd) ; k/v (B,H,S,hd) (GQA pre-broadcast upstream).
+
+    Causal + window: key j visible to query i iff  i - window < j <= i.
+    Returns (B,H,S,hd) f32.
+    """
+    b, h, s, hd = q.shape
+    scale = 1.0 / np.sqrt(hd)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    mask = (j <= i) & (i - j < window)
+    logits = jnp.where(mask[None, None], logits, NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))

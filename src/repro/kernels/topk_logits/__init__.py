@@ -1,0 +1,4 @@
+from repro.kernels.topk_logits.ops import topk_logits
+from repro.kernels.topk_logits.ref import topk_logits_ref
+
+__all__ = ["topk_logits", "topk_logits_ref"]

@@ -1,0 +1,38 @@
+"""Public wrapper: pad, run the tile kernel, merge per-tile candidates."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk_logits.kernel import NEG, topk_logits_tiles
+
+
+@functools.partial(jax.jit, static_argnames=("k", "v_tile", "interpret"))
+def topk_logits(logits, k: int = 20, *, v_tile: int = 2048,
+                interpret: bool = True):
+    """logits (..., V) -> (vals (..., k) f32, idx (..., k) i32), sorted desc.
+
+    Two-stage: Pallas per-tile top-k, then a lax.top_k merge over the
+    (tiny) candidate set.  Exact — every global top-k element is a local
+    tile top-k element.
+    """
+    shape = logits.shape
+    v = shape[-1]
+    x = logits.reshape(-1, v)
+    r = x.shape[0]
+    r_tile = 128 if r >= 128 else max(8, 1 << (r - 1).bit_length())
+    vt = min(v_tile, 1 << (v - 1).bit_length())
+    vt = max(vt, 128)
+    rpad = (-r) % r_tile
+    vpad = (-v) % vt
+    xp = jnp.pad(x.astype(jnp.float32), ((0, rpad), (0, vpad)),
+                 constant_values=NEG)
+    cand_v, cand_i = topk_logits_tiles(xp, k=min(k, vt), r_tile=r_tile,
+                                       v_tile=vt, interpret=interpret)
+    # merge candidates (R, nV*k) -> global top-k
+    mv, mi = jax.lax.top_k(cand_v[:r], k)
+    idx = jnp.take_along_axis(cand_i[:r], mi, axis=1)
+    return (mv.reshape(*shape[:-1], k),
+            idx.reshape(*shape[:-1], k).astype(jnp.int32))

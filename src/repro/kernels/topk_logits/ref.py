@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for top-k logit selection (paper §3.2.2, k=20)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_logits_ref(logits, k: int):
+    """logits (..., V) -> (vals (..., k) f32 desc-sorted, idx (..., k) i32).
+
+    Matches repro.core.logit_store.topk_compress *before* the max-shift:
+    raw top-k values and their vocab indices.
+    """
+    vals, idx = jax.lax.top_k(logits.astype(jnp.float32), k)
+    return vals, idx.astype(jnp.int32)

@@ -1,0 +1,107 @@
+"""Jittable train / prefill / serve steps shared by the trainer, the serving
+loop, and the multi-pod dry-run.
+
+``train_step`` loss kinds:
+  "ce"           — hard-label CE (baseline supervised recipe, paper §2)
+  "distill_topk" — the paper's SSL objective: CE against reconstructed
+                   top-k teacher logits (§3.2.2), vocab-chunked.
+Both stream over vocab chunks; full (tokens x vocab) logits are never
+materialized.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distill
+from repro.optim import (adam_init, adam_update, clip_by_global_norm,
+                         momentum_init, momentum_update)
+
+MTP_WEIGHT = 0.3
+
+
+def model_forward(model, cfg, params, batch):
+    """Dispatch on input kind; returns (hidden, aux)."""
+    if cfg.family == "lstm_am":
+        return model.apply(params, batch["feats"])
+    if cfg.encoder is not None:
+        return model.apply(params, batch["tokens"],
+                           enc_embeds=batch["enc_embeds"])
+    return model.apply(params, batch["tokens"])
+
+
+def make_loss_fn(model, cfg, loss_kind: str, *, vocab_chunk: int = 8192):
+    def loss_fn(params, batch):
+        h, aux = model_forward(model, cfg, params, batch)
+        w = model.unembed_matrix(params)
+        cap = cfg.logit_softcap
+        mask = batch.get("mask")
+        if loss_kind == "distill_topk":
+            loss = distill.chunked_topk_distill_ce(
+                h, w, batch["topk_vals"], batch["topk_idx"],
+                chunk=vocab_chunk, softcap=cap, mask=mask)
+        else:
+            loss = distill.chunked_ce(h, w, batch["labels"],
+                                      chunk=vocab_chunk, softcap=cap,
+                                      mask=mask)
+        metrics = {"loss": loss}
+        # MoE auxiliary losses
+        lb = sum(v for k_, v in aux.items() if k_.endswith("moe_lb_loss"))
+        zl = sum(v for k_, v in aux.items() if k_.endswith("moe_z_loss"))
+        if aux:
+            loss = loss + cfg.router_aux_weight * lb + 1e-4 * zl
+            metrics["moe_lb"] = jnp.asarray(lb)
+        # multi-token prediction (deepseek-v3)
+        if cfg.mtp_depth and loss_kind == "ce" and cfg.family != "lstm_am" \
+                and cfg.encoder is None:
+            nxt = jnp.roll(batch["tokens"], -1, axis=1)
+            h2 = model.mtp_hidden(params, h, nxt,
+                                  jnp.arange(batch["tokens"].shape[1]))
+            if h2 is not None:
+                mtp_labels = jnp.roll(batch["labels"], -1, axis=1)
+                loss = loss + MTP_WEIGHT * distill.chunked_ce(
+                    h2, w, mtp_labels, chunk=vocab_chunk, softcap=cap)
+        metrics["total_loss"] = loss
+        return loss, metrics
+    return loss_fn
+
+
+def make_train_step(model, cfg, *, loss_kind: str = "ce",
+                    optimizer: str = "momentum", lr: float = 1e-3,
+                    clip: float = 1.0, vocab_chunk: int = 8192):
+    loss_fn = make_loss_fn(model, cfg, loss_kind, vocab_chunk=vocab_chunk)
+    upd = momentum_update if optimizer == "momentum" else adam_update
+
+    def train_step(params, opt_state, batch):
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        if clip:
+            grads, gn = clip_by_global_norm(grads, clip)
+            metrics["grad_norm"] = gn
+        params, opt_state = upd(params, grads, opt_state, lr=lr)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_opt_state(params, optimizer: str = "momentum"):
+    return (momentum_init if optimizer == "momentum" else adam_init)(params)
+
+
+def make_prefill_step(model, cfg):
+    """Forward over the prompt; emit last-position logits."""
+    def prefill_step(params, batch):
+        h, _ = model_forward(model, cfg, params, batch)
+        return model.unembed(params, h[:, -1:])
+    return prefill_step
+
+
+def make_serve_step(model, cfg, *, greedy: bool = True):
+    """One decode step: next-token logits + updated cache."""
+    def serve_step(params, cache, tokens):
+        logits, cache = model.decode_step(params, cache, tokens)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, logits, cache
+    return serve_step

@@ -1,0 +1,85 @@
+"""End-to-end trainer CLI — the paper's recipe on synthetic data.
+
+Drives the full SSL pipeline (repro.core.ssl_pipeline) at laptop scale with
+the exact *structure* of the 1M-hour build: baseline CE -> teacher (+sMBR)
+-> teacher target generation into the logit store -> scheduled student
+training (BMUF or GTC) -> student sMBR on labeled data only.
+
+  PYTHONPATH=src python -m repro.launch.train --stage all --scale tiny
+  PYTHONPATH=src python -m repro.launch.train --stage student --trainer bmuf
+
+For LLM archs (`--arch qwen2.5-3b --smoke`), runs a few CE steps on
+synthetic token batches with the reduced config — the multi-arch smoke
+path; the full-size path is the dry-run (launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def train_llm_smoke(arch: str, steps: int = 4, batch: int = 2, seq: int = 64):
+    from repro.configs import get_arch, reduced
+    from repro.data.loader import token_batches
+    from repro.launch.steps import init_opt_state, make_train_step
+    from repro.models import build_model
+
+    cfg = reduced(get_arch(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    step = jax.jit(make_train_step(model, cfg, loss_kind="ce",
+                                   optimizer="adam", lr=3e-4))
+    opt = init_opt_state(params, "adam")
+    losses = []
+    for b in token_batches(cfg.vocab_size, batch, seq, steps):
+        batch_j = {k: jnp.asarray(v) for k, v in b.items()}
+        params, opt, m = step(params, opt, batch_j)
+        losses.append(float(m["loss"]))
+        print(f"  step loss={losses[-1]:.4f}")
+    assert np.isfinite(losses).all()
+    return losses
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="lstm-am-7khr")
+    ap.add_argument("--stage", default="all",
+                    choices=["all", "baseline", "teacher", "targets",
+                             "student", "smbr"])
+    ap.add_argument("--trainer", default="gtc", choices=["gtc", "bmuf"])
+    ap.add_argument("--scale", default="tiny", choices=["tiny", "small"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="LLM-arch reduced-config smoke run")
+    ap.add_argument("--steps", type=int, default=4)
+    ap.add_argument("--out", default="experiments/train")
+    args = ap.parse_args(argv)
+
+    if args.arch != "lstm-am-7khr" or args.smoke:
+        print(f"[train] LLM smoke: {args.arch}")
+        losses = train_llm_smoke(args.arch, steps=args.steps)
+        print(f"[train] done, final loss {losses[-1]:.4f}")
+        return
+
+    from repro.core.ssl_pipeline import PipelineConfig, SSLPipeline
+    scale = {"tiny": PipelineConfig.tiny(), "small": PipelineConfig.small()}[
+        args.scale]
+    pipe = SSLPipeline(scale, out_dir=args.out,
+                       student_trainer=args.trainer)
+    t0 = time.time()
+    results = pipe.run(stage=args.stage)
+    print(f"[train] stage={args.stage} done in {time.time()-t0:.1f}s")
+    os.makedirs(args.out, exist_ok=True)
+    with open(os.path.join(args.out, f"train_{args.stage}.json"), "w") as f:
+        json.dump(results, f, indent=1, default=float)
+    for k, v in results.items():
+        print(f"  {k}: {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Model factory + abstract input specs for the dry-run.
+
+``build_model(cfg)`` -> model object with a uniform surface:
+  init(key) -> params
+  apply(params, tokens/feats, **kw) -> (hidden, aux)
+  unembed(params, hidden) -> float32 logits
+  init_cache(batch, seq_len, dtype) / decode_step(params, cache, tokens)
+
+``input_specs(cfg, shape, ...)`` -> dict of jax.ShapeDtypeStruct stand-ins
+for every model input of a (arch x shape) pair: weak-type-correct, shardable,
+no device allocation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.lstm_am import LstmAM
+from repro.models.transformer import Transformer
+from repro.models.whisper import Whisper
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "lstm_am":
+        return LstmAM(cfg)
+    if cfg.encoder is not None:
+        return Whisper(cfg)
+    return Transformer(cfg)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *, topk: int = 0,
+                cache_dtype=jnp.bfloat16) -> dict:
+    """Abstract inputs for train_step / prefill_step / serve_step.
+
+    For train: tokens+labels (or teacher top-k targets when topk>0).
+    audio/vlm carve-out: whisper gets precomputed frame embeddings;
+    chameleon's VQ image tokens are ordinary ids inside its vocab.
+    lstm_am gets features + senone alignments.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "lstm_am":
+        specs = {"feats": _sds((b, s, cfg.feat_dim), jnp.bfloat16),
+                 "labels": _sds((b, s), jnp.int32)}
+        if topk:
+            specs.pop("labels")
+            specs["topk_vals"] = _sds((b, s, topk), jnp.bfloat16)
+            specs["topk_idx"] = _sds((b, s, topk), jnp.int32)
+        return specs
+
+    if cfg.encoder is not None:                      # whisper
+        st = min(cfg.max_target_len, s)
+        if shape.kind in ("train", "prefill"):
+            specs = {"enc_embeds": _sds((b, s, cfg.d_model), jnp.bfloat16),
+                     "tokens": _sds((b, st), jnp.int32)}
+            if shape.kind == "train":
+                if topk:
+                    specs["topk_vals"] = _sds((b, st, topk), jnp.bfloat16)
+                    specs["topk_idx"] = _sds((b, st, topk), jnp.int32)
+                else:
+                    specs["labels"] = _sds((b, st), jnp.int32)
+            return specs
+        # decode: one token + caches sized seq_len
+        model = build_model(cfg)
+        cache = jax.eval_shape(lambda: model.init_cache(b, s, cache_dtype))
+        return {"tokens": _sds((b, 1), jnp.int32), "cache": cache}
+
+    if shape.kind == "train":
+        specs = {"tokens": _sds((b, s), jnp.int32)}
+        if topk:
+            specs["topk_vals"] = _sds((b, s, topk), jnp.bfloat16)
+            specs["topk_idx"] = _sds((b, s, topk), jnp.int32)
+        else:
+            specs["labels"] = _sds((b, s), jnp.int32)
+        return specs
+    if shape.kind == "prefill":
+        return {"tokens": _sds((b, s), jnp.int32)}
+    # decode
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(b, s, cache_dtype))
+    return {"tokens": _sds((b, 1), jnp.int32), "cache": cache}
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct param tree without allocating anything."""
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.key(0)))

@@ -1,0 +1,241 @@
+"""GQA attention: flash-style KV-chunked full attention, sliding-window
+attention with static banded slicing, and cached single-token decode.
+
+Memory discipline: scores are never materialized beyond a
+(chunk_q x chunk_kv) or (chunk_q x window+chunk_q) tile, so 32k prefill
+lowers with bounded temporaries.  The Pallas kernel in
+``repro.kernels.swa_attention`` is the TPU twin of the windowed path; this
+file is the XLA-lowerable implementation used by the dry-run and on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, spec):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": layers.dense_init(ks[0], d, hq * hd),
+        "wk": layers.dense_init(ks[1], d, hkv * hd),
+        "wv": layers.dense_init(ks[2], d, hkv * hd),
+        "wo": layers.dense_init(ks[3], hq * hd, d),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((hkv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((hkv * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(params, cfg, x, positions):
+    """x (B,S,D) -> q (B,Hq,S,hd), k/v (B,Hkv,S,hd), rope applied."""
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = x @ params["wq"].astype(x.dtype)
+    k = x @ params["wk"].astype(x.dtype)
+    v = x @ params["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = q.reshape(b, s, hq, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = layers.rms_head_norm(params["q_norm"], q)
+        k = layers.rms_head_norm(params["k_norm"], k)
+    if cfg.pos_emb == "rope":
+        cos, sin = layers.rope_tables(positions, hd, cfg.rope_theta)
+        q = layers.apply_rope(q, cos, sin)
+        k = layers.apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _group(q, hkv):
+    """(B,Hq,S,hd) -> (B,Hkv,G,S,hd)."""
+    b, hq, s, hd = q.shape
+    return q.reshape(b, hkv, hq // hkv, s, hd)
+
+
+def flash_full_attention(q, k, v, q_pos, kv_pos, *, causal=True,
+                         attn_softcap=0.0, chunk_q=512, chunk_kv=1024,
+                         bias_mask=None):
+    """Two-level chunked flash attention.
+
+    q (B,Hkv,G,Sq,hd); k/v (B,Hkv,Skv,hd); q_pos (Sq,), kv_pos (Skv,).
+    Returns (B,Hkv,G,Sq,hd).
+    """
+    b, hkv, g, sq, hd = q.shape
+    hdv = v.shape[-1]                 # may differ from hd (e.g. MLA)
+    skv = k.shape[2]
+    scale = 1.0 / np.sqrt(hd)
+    cq = min(chunk_q, sq)
+    ckv = min(chunk_kv, skv)
+    # pad seq dims to chunk multiples
+    pq = (-sq) % cq
+    pkv = (-skv) % ckv
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, pq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pkv), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pkv), (0, 0)))
+    qpos = jnp.pad(q_pos, (0, pq), constant_values=-1)
+    kpos = jnp.pad(kv_pos, (0, pkv), constant_values=2**30)
+    nq, nkv = (sq + pq) // cq, (skv + pkv) // ckv
+    qp = qp.reshape(b, hkv, g, nq, cq, hd)
+    kp = kp.reshape(b, hkv, nkv, ckv, hd)
+    vp = vp.reshape(b, hkv, nkv, ckv, hdv)
+    qpos = qpos.reshape(nq, cq)
+    kpos = kpos.reshape(nkv, ckv)
+
+    def q_chunk(carry, qi):
+        qc, qpc = qi                      # (B,Hkv,G,cq,hd), (cq,)
+        m0 = jnp.full((b, hkv, g, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, cq, hdv), jnp.float32)
+
+        def kv_chunk(acc, ki):
+            m, l, a = acc
+            kc, vc, kpc = ki              # (B,Hkv,ckv,hd), ..., (ckv,)
+            s_ = jnp.einsum("bhgqd,bhkd->bhgqk", qc.astype(jnp.float32),
+                            kc.astype(jnp.float32)) * scale
+            s_ = layers.softcap(s_, attn_softcap)
+            mask = qpc[:, None] >= 0
+            if causal:
+                mask = mask & (qpc[:, None] >= kpc[None, :])
+            s_ = jnp.where(mask, s_, NEG_INF)
+            m_new = jnp.maximum(m, s_.max(axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s_ - m_new[..., None])
+            l_new = l * corr + p.sum(axis=-1)
+            a_new = a * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vc.astype(jnp.float32))
+            return (m_new, l_new, a_new), None
+
+        (m, l, a), _ = jax.lax.scan(
+            kv_chunk, (m0, l0, a0),
+            (kp.transpose(2, 0, 1, 3, 4), vp.transpose(2, 0, 1, 3, 4), kpos))
+        out = a / jnp.maximum(l[..., None], 1e-30)
+        return carry, out
+
+    _, outs = jax.lax.scan(q_chunk, None,
+                           (qp.transpose(3, 0, 1, 2, 4, 5), qpos))
+    # outs (nq, B, Hkv, G, cq, hd)
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, hkv, g, nq * cq, hdv)
+    return out[..., :sq, :].astype(q.dtype)
+
+
+def windowed_attention(q, k, v, q_pos0, window, *, attn_softcap=0.0,
+                       chunk_q=512):
+    """Sliding-window causal attention; Sq == Skv (prefill/train).
+
+    q (B,Hkv,G,S,hd); k/v (B,Hkv,S,hd).  For query chunk i only the
+    [i*cq - window, i*cq + cq) key band is touched (static slice), so FLOPs
+    scale as S * (window + cq) instead of S^2.
+    """
+    b, hkv, g, s, hd = q.shape
+    scale = 1.0 / np.sqrt(hd)
+    cq = min(chunk_q, s)
+    pq = (-s) % cq
+    # pad keys left by `window` (masked) and right to a chunk multiple
+    w = int(window)
+    kp = jnp.pad(k, ((0, 0), (0, 0), (w, pq), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (w, pq), (0, 0)))
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, pq), (0, 0)))
+    nq = (s + pq) // cq
+    band = w + cq
+
+    def q_chunk(carry, i):
+        qc = jax.lax.dynamic_slice_in_dim(qp, i * cq, cq, axis=3)
+        kc = jax.lax.dynamic_slice_in_dim(kp, i * cq, band, axis=2)
+        vc = jax.lax.dynamic_slice_in_dim(vp, i * cq, band, axis=2)
+        qpos = q_pos0 + i * cq + jnp.arange(cq)          # absolute positions
+        kpos = q_pos0 + i * cq - w + jnp.arange(band)
+        s_ = jnp.einsum("bhgqd,bhkd->bhgqk", qc.astype(jnp.float32),
+                        kc.astype(jnp.float32)) * scale
+        s_ = layers.softcap(s_, attn_softcap)
+        valid = (kpos[None, :] >= q_pos0) & (kpos[None, :] <= qpos[:, None]) \
+            & (qpos[:, None] - kpos[None, :] < w)
+        s_ = jnp.where(valid, s_, NEG_INF)
+        p = jax.nn.softmax(s_, axis=-1)
+        out = jnp.einsum("bhgqk,bhkd->bhgqd", p, vc.astype(jnp.float32))
+        return carry, out
+
+    _, outs = jax.lax.scan(q_chunk, None, jnp.arange(nq))
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, hkv, g, nq * cq, hd)
+    return out[..., :s, :].astype(q.dtype)
+
+
+def attention_apply(params, cfg, spec, x, positions):
+    """Full-sequence (train/prefill) attention block body. x (B,S,D)."""
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    qg = _group(q, cfg.n_kv_heads)
+    s = x.shape[1]
+    # cost-probe mode: one whole-sequence chunk (no scan; same FLOPs as
+    # the chunked schedule, which also executes masked blocks)
+    cq = s if cfg.attn_whole_seq else 512
+    ckv = s if cfg.attn_whole_seq else 1024
+    if spec.mixer == "swa" and spec.window and spec.window < x.shape[1]:
+        o = windowed_attention(qg, k, v, 0, spec.window,
+                               attn_softcap=cfg.attn_softcap, chunk_q=cq)
+    else:
+        o = flash_full_attention(qg, k, v, positions, positions,
+                                 attn_softcap=cfg.attn_softcap,
+                                 chunk_q=cq, chunk_kv=ckv)
+    b, s, _ = x.shape
+    o = o.reshape(b, cfg.n_heads, s, cfg.resolved_head_dim)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    return o @ params["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------- decode
+
+def init_attn_cache(cfg, spec, batch, seq_len, dtype):
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    slots = min(spec.window, seq_len) if (spec.mixer == "swa" and spec.window) \
+        else seq_len
+    return {"k": jnp.zeros((batch, hkv, slots, hd), dtype),
+            "v": jnp.zeros((batch, hkv, slots, hd), dtype)}
+
+
+def attention_decode(params, cfg, spec, x, cache, pos):
+    """One-token decode. x (B,1,D); pos scalar int32 (tokens so far)."""
+    b = x.shape[0]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q, k, v = _project_qkv(params, cfg, x, pos[None] if pos.ndim == 0
+                           else pos)
+    slots = cache["k"].shape[2]
+    slot = jax.lax.rem(pos, slots) if slots else pos
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), slot, axis=2)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), slot, axis=2)
+    # positions held by each cache slot (ring for swa, linear otherwise)
+    idx = jnp.arange(slots)
+    if spec.mixer == "swa" and spec.window and slots < 2**30:
+        # slot j holds position: the latest p <= pos with p % slots == j
+        kpos = pos - jax.lax.rem(pos - idx, slots)
+        kpos = jnp.where(kpos > pos, kpos - slots, kpos)  # safety
+        valid = (kpos >= 0) & (pos - kpos < spec.window) & (kpos <= pos)
+    else:
+        kpos = idx
+        valid = idx <= pos
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(b, hkv, hq // hkv, 1, hd)
+    s_ = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                    ck.astype(jnp.float32)) * scale
+    s_ = layers.softcap(s_, cfg.attn_softcap)
+    s_ = jnp.where(valid[None, None, None, None, :], s_, NEG_INF)
+    p = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, cv.astype(jnp.float32))
+    o = o.reshape(b, hq, 1, hd).transpose(0, 2, 1, 3).reshape(b, 1, hq * hd)
+    o = o.astype(x.dtype) @ params["wo"].astype(x.dtype)
+    return o, {"k": ck, "v": cv}

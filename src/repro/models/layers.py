@@ -1,0 +1,99 @@
+"""Shared building blocks: initializers, norms, MLPs, RoPE, embeddings.
+
+All modules are pure functions over explicit param dicts.  Params are created
+in float32 and cast by the runtime's param-dtype policy (launch/train.py);
+norm/statistics math always runs in float32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, fan_in: int, fan_out: int, *, scale: float = 1.0,
+               dtype=jnp.float32):
+    std = scale / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, (fan_in, fan_out), dtype=jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms
+
+def norm_init(d: int, kind: str):
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), jnp.float32)}       # (1 + scale) form
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def norm_apply(params, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * (1.0 + params["scale"])
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(scale, x, eps: float = 1e-6):
+    """Per-head qk-norm over the last (head_dim) axis."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + scale)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- mlp
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def mlp_init(key, d: int, d_ff: int, *, gated: bool = True):
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[0], d, d_ff),
+         "down": dense_init(ks[2], d_ff, d)}
+    if gated:
+        p["gate"] = dense_init(ks[1], d, d_ff)
+    return p
+
+
+def mlp_apply(params, x, act: str):
+    h = x @ params["up"].astype(x.dtype)
+    if "gate" in params:
+        h = act_fn(act)(x @ params["gate"].astype(x.dtype)) * h
+    else:
+        h = act_fn(act)(h)
+    return h @ params["down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------- rope
+
+def rope_tables(positions, dim: int, theta: float):
+    """positions (...,) int -> cos/sin (..., dim/2) float32."""
+    inv = 1.0 / (theta ** (np.arange(0, dim, 2, dtype=np.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., S, dim); cos/sin broadcastable (..., S, dim/2). Paired halves."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    o1 = xf1 * cos - xf2 * sin
+    o2 = xf2 * cos + xf1 * sin
+    return jnp.concatenate([o1, o2], axis=-1).astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap

@@ -1,0 +1,75 @@
+"""The paper's acoustic models (Section 2 / 3.2).
+
+Student: 5x768 unidirectional LSTM over 192-d stacked log-mel features,
+3,183 senone outputs, ~24M params, 3-frame look-ahead (realized as a feature
+shift in the data pipeline).  Teacher: 5x768 *bidirectional* LSTM (~78M).
+No residuals/norms — faithful to the plain stacked-LSTM hybrid AM of 2019.
+Supports chunked-BPTT: ``apply`` takes and returns per-layer (h, c) states.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, recurrent
+
+
+class LstmAM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.bidirectional = any(m == "bilstm" for m in cfg.mixers())
+        self.n_layers = cfg.n_layers
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, self.n_layers + 1)
+        params = {"out": layers.dense_init(
+            ks[-1],
+            cfg.lstm_hidden * (2 if self.bidirectional else 1),
+            cfg.n_senones)}
+        d_in = cfg.feat_dim
+        for i in range(self.n_layers):
+            if self.bidirectional:
+                kf, kb = jax.random.split(ks[i])
+                params[f"l{i}"] = {
+                    "fwd": recurrent.init_lstm(kf, d_in, cfg.lstm_hidden),
+                    "bwd": recurrent.init_lstm(kb, d_in, cfg.lstm_hidden)}
+                d_in = 2 * cfg.lstm_hidden
+            else:
+                params[f"l{i}"] = recurrent.init_lstm(ks[i], d_in,
+                                                      cfg.lstm_hidden)
+                d_in = cfg.lstm_hidden
+        return params
+
+    def apply(self, params, feats, *, state=None, positions=None):
+        """feats (B,T,F) -> (hidden (B,T,H), aux). state: list of (h,c)."""
+        x = feats
+        new_state = []
+        for i in range(self.n_layers):
+            if self.bidirectional:
+                x = recurrent.bilstm_apply(params[f"l{i}"]["fwd"],
+                                           params[f"l{i}"]["bwd"], x)
+                new_state.append(None)
+            else:
+                st = None if state is None else state[i]
+                x, st = recurrent.lstm_apply(params[f"l{i}"], x, st)
+                new_state.append(st)
+        return x, {"state": new_state if not self.bidirectional else None}
+
+    def unembed_matrix(self, params):
+        return params["out"]
+
+    def unembed(self, params, h):
+        return (h @ params["out"].astype(h.dtype)).astype(jnp.float32)
+
+    def logits(self, params, feats, state=None):
+        h, aux = self.apply(params, feats, state=state)
+        return self.unembed(params, h), aux
+
+    def init_state(self, batch, dtype=jnp.float32):
+        if self.bidirectional:
+            return None
+        h = self.cfg.lstm_hidden
+        return [(jnp.zeros((batch, h), dtype), jnp.zeros((batch, h),
+                                                         jnp.float32))
+                for _ in range(self.n_layers)]

@@ -1,0 +1,126 @@
+"""Mixture-of-Experts channel mixer with capacity-based sort dispatch.
+
+TPU adaptation: GPU MoE stacks use index-list gather/scatter per expert; here
+tokens are routed into a static (E, C, D) buffer via a cumsum-rank scatter
+(all shapes static, jit/pjit friendly).  The expert dimension shards over the
+`model` mesh axis (expert parallelism); XLA inserts the token all-to-all.
+Overflow tokens beyond capacity are dropped (standard capacity-factor MoE);
+dropped assignments fall back to the residual path.
+
+Aux outputs: load-balance loss (Switch-style f*P) and router z-loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+
+
+def init_moe(key, cfg):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": layers.dense_init(ks[0], d, e, scale=0.1),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f), jnp.float32)
+                   / np.sqrt(d)),
+        "w_up": (jax.random.normal(ks[2], (e, d, f), jnp.float32)
+                 / np.sqrt(d)),
+        "w_down": (jax.random.normal(ks[3], (e, f, d), jnp.float32)
+                   / np.sqrt(f)),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = layers.mlp_init(ks[4], d,
+                                      cfg.n_shared_experts * f, gated=True)
+    return p
+
+
+def capacity(n_tokens: int, cfg) -> int:
+    """Per-group expert capacity: ceil(K*N/E * factor), 8-aligned."""
+    c = int(np.ceil(cfg.moe_top_k * n_tokens / cfg.n_experts
+                    * cfg.capacity_factor))
+    return max(8, ((c + 7) // 8) * 8)          # align to 8
+
+
+def _group_dispatch_combine(xt, top_p, top_i, wg, wu, wd, *, e, k, cap,
+                            act):
+    """One routing group (GShard-style).  xt (N,D); top_* (N,K).
+
+    Returns (y (N,D), counts (E,), n_dropped scalar).  All shapes static;
+    the scatter/gather touch only group-local rows, so under vmap the
+    SPMD partitioner shards the *group* dim and never sees a global
+    data-dependent scatter (the auto-SPMD compile pathology — see
+    EXPERIMENTS.md §Perf).
+    """
+    n, d = xt.shape
+    flat_e = top_i.reshape(-1)                                # (N*K,)
+    sort_idx = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[sort_idx]
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    pos_sorted = jnp.arange(n * k, dtype=jnp.int32) - starts[sorted_e]
+    pos = jnp.zeros((n * k,), jnp.int32).at[sort_idx].set(pos_sorted)
+    valid = pos < cap
+    slot = jnp.where(valid, flat_e * cap + pos, e * cap)      # drop row
+
+    src = jnp.repeat(xt, k, axis=0)                           # (N*K, D)
+    buf = jnp.zeros((e * cap + 1, d), xt.dtype).at[slot].add(
+        src * valid[:, None].astype(xt.dtype))
+    buf = buf[:-1].reshape(e, cap, d)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) \
+        * jnp.einsum("ecd,edf->ecf", buf, wu)
+    y_e = jnp.einsum("ecf,efd->ecd", h, wd)
+
+    y_flat = jnp.concatenate([y_e.reshape(e * cap, d),
+                              jnp.zeros((1, d), xt.dtype)])
+    y_tok = y_flat[slot] * (top_p.reshape(-1, 1).astype(xt.dtype)
+                            * valid[:, None].astype(xt.dtype))
+    y = y_tok.reshape(n, k, d).sum(axis=1)
+    return y, counts, jnp.sum(1 - valid.astype(jnp.float32))
+
+
+def moe_apply(params, cfg, x):
+    """x (B,S,D) -> (y (B,S,D), aux dict).
+
+    Grouped (GShard-style) dispatch: each batch row is a routing group
+    with its own capacity; groups are vmapped, so the group dim inherits
+    the batch's data-axis sharding and dispatch stays shard-local.
+    """
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.moe_top_k
+    e = cfg.n_experts
+    xt = x.reshape(t, d)
+
+    logits = (xt @ params["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                    # (T,K)
+    if cfg.moe_renorm_topk:
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    cap = capacity(s, cfg)                                    # per group
+    wg = params["w_gate"].astype(x.dtype)
+    wu = params["w_up"].astype(x.dtype)
+    wd = params["w_down"].astype(x.dtype)
+
+    y, counts, dropped = jax.vmap(
+        lambda xg, pg, ig: _group_dispatch_combine(
+            xg, pg, ig, wg, wu, wd, e=e, k=k, cap=cap, act=cfg.act)
+    )(xt.reshape(b, s, d), top_p.reshape(b, s, k), top_i.reshape(b, s, k))
+    y = y.reshape(t, d)
+
+    if cfg.n_shared_experts:
+        y = y + layers.mlp_apply(params["shared"], xt, cfg.act)
+
+    # ---- aux losses (global across groups) ----
+    counts = counts.sum(axis=0)
+    frac_tokens = counts.astype(jnp.float32) / (t * k)        # f_e
+    mean_prob = probs.mean(axis=0)                            # P_e
+    lb_loss = e * jnp.sum(frac_tokens * mean_prob)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss,
+           "moe_drop_frac": dropped.sum() / (t * k)}
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,6 @@
+from repro.optim.sgd import (adam_init, adam_update, clip_by_global_norm,
+                             momentum_init, momentum_update)
+from repro.optim.schedules import exponential_decay, warmup_exponential
+
+__all__ = ["momentum_init", "momentum_update", "adam_init", "adam_update",
+           "clip_by_global_norm", "exponential_decay", "warmup_exponential"]

@@ -1,0 +1,22 @@
+"""LR schedules. The paper uses exponential decay over (sub-)epochs."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def exponential_decay(lr0: float, decay: float, steps_per_epoch: int):
+    def fn(step):
+        epoch = step // steps_per_epoch
+        return lr0 * (decay ** epoch.astype(jnp.float32)
+                      if hasattr(epoch, "astype") else decay ** epoch)
+    return fn
+
+
+def warmup_exponential(lr0: float, warmup_steps: int, decay: float,
+                       steps_per_epoch: int):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (s + 1) / max(warmup_steps, 1))
+        epoch = jnp.floor(s / steps_per_epoch)
+        return lr0 * warm * (decay ** epoch)
+    return fn

@@ -1,0 +1,69 @@
+"""Optimizers, hand-rolled (no optax dependency): SGD-momentum (the paper's
+trainer) and Adam (for LLM-arch configs).  States are explicit pytrees so
+BMUF/GTC can wrap them."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+# ----------------------------------------------------------- SGD momentum
+
+def momentum_init(params):
+    return {"mu": jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+
+def momentum_update(params, grads, state, *, lr, beta: float = 0.9,
+                    nesterov: bool = True):
+    mu = jax.tree_util.tree_map(
+        lambda m, g: beta * m + g.astype(jnp.float32), state["mu"], grads)
+    if nesterov:
+        step = jax.tree_util.tree_map(
+            lambda m, g: beta * m + g.astype(jnp.float32), mu, grads)
+    else:
+        step = mu
+    new_params = jax.tree_util.tree_map(
+        lambda p, s: (p.astype(jnp.float32) - lr * s).astype(p.dtype),
+        params, step)
+    return new_params, {"mu": mu}
+
+
+# ------------------------------------------------------------------ Adam
+
+def adam_init(params):
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree_util.tree_map(z, params),
+            "v": jax.tree_util.tree_map(z, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                weight_decay=0.0):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(
+        lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+        state["m"], grads)
+    v = jax.tree_util.tree_map(
+        lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state["v"], grads)
+    mh = 1.0 - b1 ** t.astype(jnp.float32)
+    vh = 1.0 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        step = (m_ / mh) / (jnp.sqrt(v_ / vh) + eps)
+        if weight_decay:
+            step = step + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    return (jax.tree_util.tree_map(upd, params, m, v),
+            {"m": m, "v": v, "t": t})

@@ -1,0 +1,6 @@
+from repro.seqtrain.fb import forward_backward, forward_log_norm
+from repro.seqtrain.graphs import DenominatorGraph, build_denominator_graph
+from repro.seqtrain.smbr import smbr_loss, make_smbr_loss_fn
+
+__all__ = ["forward_backward", "forward_log_norm", "DenominatorGraph",
+           "build_denominator_graph", "smbr_loss", "make_smbr_loss_fn"]

@@ -1,0 +1,101 @@
+"""Log-space forward-backward over a senone-level HMM (lax.scan).
+
+Used by sMBR (paper §3.4): the denominator graph is a senone-bigram HMM
+(graphs.py), the acoustic scores are scaled student log-posteriors.  All
+recursions are in float32 log-space; time is the scanned axis so HLO size
+is T-independent.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def _lse(x, axis=-1):
+    return jax.nn.logsumexp(x, axis=axis)
+
+
+def forward_log_norm(log_obs, log_trans, log_init, mask=None):
+    """log p(O) under the graph.
+
+    log_obs (B,T,S); log_trans (S,S) [from, to]; log_init (S,).
+    mask (B,T) 1=real frame.  Returns (B,) log-normalizer.
+    """
+    b, t, s = log_obs.shape
+    alpha0 = log_init[None] + log_obs[:, 0]            # (B,S)
+
+    def step(alpha, xs):
+        obs, mk = xs                                   # (B,S), (B,)
+        nxt = _lse(alpha[:, :, None] + log_trans[None], axis=1) + obs
+        alpha = jnp.where(mk[:, None] > 0, nxt, alpha)
+        return alpha, None
+
+    mk = jnp.ones((b, t), jnp.float32) if mask is None else mask
+    alpha, _ = jax.lax.scan(step, alpha0,
+                            (log_obs.transpose(1, 0, 2)[1:],
+                             mk.transpose(1, 0)[1:]))
+    return _lse(alpha, axis=-1)
+
+
+def forward_backward(log_obs, log_trans, log_init, mask=None):
+    """State posteriors gamma (B,T,S) + log-normalizer (B,)."""
+    b, t, s = log_obs.shape
+    mk = jnp.ones((b, t), jnp.float32) if mask is None else mask
+
+    alpha0 = log_init[None] + log_obs[:, 0]
+
+    def fstep(alpha, xs):
+        obs, m = xs
+        nxt = _lse(alpha[:, :, None] + log_trans[None], axis=1) + obs
+        alpha = jnp.where(m[:, None] > 0, nxt, alpha)
+        return alpha, alpha
+
+    _, alphas = jax.lax.scan(fstep, alpha0,
+                             (log_obs.transpose(1, 0, 2)[1:],
+                              mk.transpose(1, 0)[1:]))
+    alphas = jnp.concatenate([alpha0[None], alphas], axis=0)   # (T,B,S)
+
+    beta_last = jnp.zeros((b, s), jnp.float32)
+
+    def bstep(beta, xs):
+        obs_next, m_next = xs       # obs at t+1, mask at t+1
+        nxt = _lse(log_trans[None] + (beta + obs_next)[:, None, :], axis=2)
+        beta = jnp.where(m_next[:, None] > 0, nxt, beta)
+        return beta, beta
+
+    _, betas_rev = jax.lax.scan(
+        bstep, beta_last,
+        (log_obs.transpose(1, 0, 2)[1:][::-1],
+         mk.transpose(1, 0)[1:][::-1]))
+    betas = jnp.concatenate([betas_rev[::-1], beta_last[None]], axis=0)
+
+    log_gamma = alphas + betas                                  # (T,B,S)
+    logz = _lse(log_gamma[0], axis=-1)                          # (B,)
+    gamma = jnp.exp(log_gamma - logz[None, :, None])
+    gamma = gamma * mk.transpose(1, 0)[:, :, None]
+    return gamma.transpose(1, 0, 2), logz
+
+
+def viterbi(log_obs, log_trans, log_init):
+    """Best path (B,T) int32 — used by the toy decoder / WER proxy."""
+    b, t, s = log_obs.shape
+    d0 = log_init[None] + log_obs[:, 0]
+
+    def step(delta, obs):
+        scores = delta[:, :, None] + log_trans[None]            # (B,S,S)
+        best = jnp.max(scores, axis=1) + obs
+        arg = jnp.argmax(scores, axis=1)
+        return best, arg
+
+    delta, args = jax.lax.scan(step, d0, log_obs.transpose(1, 0, 2)[1:])
+    last = jnp.argmax(delta, axis=-1)                           # (B,)
+
+    def back(state, arg):
+        prev = jnp.take_along_axis(arg, state[:, None], axis=1)[:, 0]
+        return prev, prev
+
+    _, path_rev = jax.lax.scan(back, last, args[::-1])
+    path = jnp.concatenate([path_rev[::-1], last[None]], axis=0)
+    return path.transpose(1, 0)

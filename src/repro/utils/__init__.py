@@ -1,0 +1,5 @@
+from repro.utils.trees import (map_with_path, param_count, param_bytes,
+                               split_key_like, tree_paths)
+
+__all__ = ["map_with_path", "param_count", "param_bytes", "split_key_like",
+           "tree_paths"]

@@ -1,0 +1,116 @@
+"""Post-SPMD HLO analysis: collective-traffic accounting for the roofline.
+
+``cost_analysis()`` gives FLOPs and HBM bytes but not inter-chip traffic;
+we parse the compiled HLO text and sum the *output* tensor bytes of every
+collective op (the standard convention: an all-reduce of N bytes moves
+~2N(D-1)/D over the ring, an all-gather's output IS what crosses links —
+we record raw tensor bytes per op kind and let the roofline apply the
+ring-algorithm factors).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast")
+
+# e.g.  %all-reduce.5 = f32[8,128]{1,0} all-reduce(...)
+#       ROOT %t = (bf16[4,8]{...}, f32[]) all-to-all(...)
+_OP_RE = re.compile(
+    r"=\s*(?P<shape>\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(?P<op>" + "|".join(COLLECTIVES) + r")\b")
+
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+
+
+def shape_bytes(text: str) -> int:
+    """Bytes of one 'dtype[d0,d1]' or tuple '(a[..], b[..])' shape string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+    def to_dict(self):
+        return {"bytes_by_kind": dict(self.bytes_by_kind),
+                "count_by_kind": dict(self.count_by_kind),
+                "total_bytes": self.total_bytes,
+                "total_count": self.total_count}
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum output-tensor bytes of every collective in (post-SPMD) HLO."""
+    b = defaultdict(int)
+    c = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        op = m.group("op")
+        # '-start' ops carry the shape; ignore '-done' duplicates by op name
+        b[op] += shape_bytes(m.group("shape"))
+        c[op] += 1
+    return CollectiveStats(bytes_by_kind=dict(b), count_by_kind=dict(c))
+
+
+def wire_bytes(stats: CollectiveStats, n_devices: int) -> float:
+    """Ring-algorithm bytes actually crossing links, per device.
+
+    all-reduce: 2(D-1)/D x tensor bytes; all-gather / reduce-scatter:
+    (D-1)/D; all-to-all: (D-1)/D; collective-permute: 1x.
+    Approximation: uses the participating-device count = full mesh (XLA's
+    replica-groups refine this; good enough for a roofline term).
+    """
+    d = max(n_devices, 2)
+    f_ar = 2 * (d - 1) / d
+    f_ag = (d - 1) / d
+    total = 0.0
+    for kind, by in stats.bytes_by_kind.items():
+        if kind == "all-reduce":
+            total += f_ar * by
+        elif kind in ("all-gather", "reduce-scatter", "all-to-all",
+                      "collective-broadcast"):
+            total += f_ag * by
+        else:                       # collective-permute
+            total += by
+    return total
+
+
+def duplicate_op_fraction(hlo_text: str) -> float:
+    """Fraction of fusion ops appearing >1x with identical shapes — a cheap
+    remat/redundancy smell used by the §Perf iteration notes."""
+    sig = re.findall(r"fusion(?:\.\d+)? = ([^ ]+)", hlo_text)
+    if not sig:
+        return 0.0
+    from collections import Counter
+    counts = Counter(sig)
+    dup = sum(v - 1 for v in counts.values() if v > 1)
+    return dup / max(len(sig), 1)

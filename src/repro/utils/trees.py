@@ -1,0 +1,54 @@
+"""Pytree utilities: path-aware maps, param accounting, rng fanout."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_paths(tree):
+    """[(path_str, leaf)] with '/'-joined dict-key paths."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for keypath, leaf in flat:
+        parts = []
+        for k in keypath:
+            if isinstance(k, jax.tree_util.DictKey):
+                parts.append(str(k.key))
+            elif isinstance(k, jax.tree_util.SequenceKey):
+                parts.append(str(k.idx))
+            else:
+                parts.append(str(k))
+        out.append(("/".join(parts), leaf))
+    return out
+
+
+def map_with_path(fn, tree):
+    """tree_map where fn receives (path_str, leaf)."""
+    def wrap(keypath, leaf):
+        parts = []
+        for k in keypath:
+            if isinstance(k, jax.tree_util.DictKey):
+                parts.append(str(k.key))
+            elif isinstance(k, jax.tree_util.SequenceKey):
+                parts.append(str(k.idx))
+            else:
+                parts.append(str(k))
+        return fn("/".join(parts), leaf)
+    return jax.tree_util.tree_map_with_path(wrap, tree)
+
+
+def param_count(tree) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree_util.tree_leaves(tree)))
+
+
+def param_bytes(tree) -> int:
+    return int(sum(np.prod(x.shape) * jnp.dtype(x.dtype).itemsize
+                   for x in jax.tree_util.tree_leaves(tree)))
+
+
+def split_key_like(key, tree):
+    """Split an rng key into a tree of keys with the same structure."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree_util.tree_unflatten(treedef, list(keys))

@@ -1,0 +1,129 @@
+"""Data pipeline: determinism, featurizer faithfulness, chunking, hashing."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (CorpusLoader, FeatureConfig, SynthConfig,
+                        chunk_utterances, featurize_utterance, pad_batch,
+                        speaker_hash, synth_utterance)
+from repro.data.features import (GlobalMVN, align_labels, causal_mean_norm,
+                                 log_mel, mel_filterbank, stack_subsample)
+from repro.data.synthetic import DEVICES
+
+
+SC = SynthConfig(n_speakers=8, n_senones=49, mean_utt_sec=1.0)
+FC = FeatureConfig(n_mels=16)
+
+
+def test_synth_deterministic():
+    u1 = synth_utterance(SC, 42)
+    u2 = synth_utterance(SC, 42)
+    np.testing.assert_array_equal(u1.audio, u2.audio)
+    np.testing.assert_array_equal(u1.senones, u2.senones)
+    assert u1.speaker == u2.speaker and u1.device == u2.device
+
+
+def test_synth_structure():
+    u = synth_utterance(SC, 7)
+    assert u.device in DEVICES
+    assert u.audio.dtype == np.float32
+    assert np.abs(u.audio).max() <= 1.0
+    assert len(u.audio) == len(u.senones) * 160      # 10ms @ 16k
+    assert u.senones.min() >= 0 and u.senones.max() < SC.n_senones
+
+
+def test_log_mel_shapes():
+    u = synth_utterance(SC, 1)
+    lm = log_mel(u.audio, FC)
+    assert lm.shape[1] == FC.n_mels
+    assert np.isfinite(lm).all()
+    # ~one frame per 10ms
+    assert abs(lm.shape[0] - len(u.senones)) <= 3
+
+
+def test_mel_filterbank_partition():
+    fb = mel_filterbank(16, 512, 16000, 60, 7600)
+    assert fb.shape == (16, 257)
+    assert (fb >= 0).all()
+    assert (fb.sum(1) > 0).all()
+
+
+def test_stack_subsample_offsets():
+    x = np.arange(30, dtype=np.float32).reshape(10, 3)
+    s0 = stack_subsample(x, FeatureConfig(n_mels=3), 0)
+    s1 = stack_subsample(x, FeatureConfig(n_mels=3), 1)
+    assert s0.shape == (3, 9)
+    # offset shifts the stacking phase by one 10ms frame
+    np.testing.assert_array_equal(s1[0, :3], x[1])
+
+
+def test_causal_mean_carry():
+    """Carrying the mean across utterances == one concatenated pass."""
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(20, 4)).astype(np.float32)
+    b = rng.normal(size=(15, 4)).astype(np.float32)
+    na, carry = causal_mean_norm(a, 0.95)
+    nb, _ = causal_mean_norm(b, 0.95, carry)
+    ncat, _ = causal_mean_norm(np.concatenate([a, b]), 0.95)
+    np.testing.assert_allclose(np.concatenate([na, nb]), ncat, atol=1e-5)
+
+
+def test_lookahead_label_shift():
+    u = synth_utterance(SC, 3)
+    f0, l0, _ = featurize_utterance(u, FC, lookahead=0)
+    f3, l3, _ = featurize_utterance(u, FC, lookahead=3)
+    assert f0.shape == f3.shape
+    # label at output t with lookahead L == senone of stacked frame t-L
+    np.testing.assert_array_equal(l3[3:], l0[:-3])
+
+
+@given(t=st.integers(1, 120), chunk=st.sampled_from([16, 32, 64]))
+@settings(max_examples=30, deadline=None)
+def test_chunking_covers_everything(t, chunk):
+    feats = np.arange(t * 2, dtype=np.float32).reshape(t, 2)
+    labels = np.arange(t, dtype=np.int32)
+    chunks = chunk_utterances([(feats, labels, 0)], chunk)
+    # total valid frames == t, all chunks padded to chunk_len
+    assert sum(c.valid for c in chunks) == t
+    assert all(c.feats.shape == (chunk, 2) for c in chunks)
+    rec = np.concatenate([c.labels[: c.valid] for c in
+                          sorted(chunks, key=lambda c: c.chunk_index)])
+    np.testing.assert_array_equal(rec, labels)
+
+
+def test_pad_batch_mask():
+    a = (np.ones((5, 3), np.float32), np.ones(5, np.int32), 0)
+    b = (np.ones((9, 3), np.float32), np.ones(9, np.int32), 1)
+    out = pad_batch([a, b])
+    assert out["feats"].shape == (2, 9, 3)
+    assert out["mask"].sum() == 14
+
+
+def test_speaker_hash_stable_and_spread():
+    h1 = [speaker_hash(s, 4) for s in range(100)]
+    h2 = [speaker_hash(s, 4) for s in range(100)]
+    assert h1 == h2
+    counts = np.bincount(h1, minlength=4)
+    assert counts.min() > 10        # roughly uniform
+
+
+def test_loader_partition_disjoint():
+    """Workers see disjoint speaker sets; union covers all utterances'
+    speakers."""
+    l0 = CorpusLoader(synth=SC, feat=FC, worker=0, n_workers=2)
+    l1 = CorpusLoader(synth=SC, feat=FC, worker=1, n_workers=2)
+    u0 = l0._utts_for_range(0, 40)
+    u1 = l1._utts_for_range(0, 40)
+    s0 = {u.speaker for u in u0}
+    s1 = {u.speaker for u in u1}
+    assert s0.isdisjoint(s1)
+    assert len(u0) + len(u1) == 40
+
+
+def test_mvn_normalizes():
+    rng = np.random.default_rng(1)
+    feats = [rng.normal(5.0, 3.0, size=(50, 4)).astype(np.float32)
+             for _ in range(8)]
+    mvn = GlobalMVN.estimate(feats)
+    out = mvn(feats[0])
+    assert abs(out.mean()) < 1.0 and 0.3 < out.std() < 3.0

@@ -1,0 +1,112 @@
+"""Distillation losses + top-k logit store: exactness and properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import distill
+from repro.core.logit_store import (LogitStore, full_bytes_per_frame,
+                                    reconstruct, storage_bytes_per_frame,
+                                    topk_compress)
+
+
+def test_chunked_ce_matches_full():
+    rng = np.random.default_rng(0)
+    b, s, d, v = 2, 5, 16, 333
+    h = jnp.asarray(rng.normal(size=(b, s, d)), jnp.float32) * 0.3
+    w = jnp.asarray(rng.normal(size=(d, v)), jnp.float32) * 0.3
+    labels = jnp.asarray(rng.integers(0, v, (b, s)), jnp.int32)
+    full_logits = (h @ w).astype(jnp.float32)
+    ref = -jnp.mean(jnp.take_along_axis(
+        jax.nn.log_softmax(full_logits, -1), labels[..., None], -1))
+    got = distill.chunked_ce(h, w, labels, chunk=64)
+    np.testing.assert_allclose(float(got), float(ref), rtol=1e-5)
+
+
+@pytest.mark.parametrize("chunk", [32, 100, 512])
+def test_chunked_topk_matches_full(chunk):
+    rng = np.random.default_rng(1)
+    b, s, d, v, k = 2, 4, 12, 200, 7
+    h = jnp.asarray(rng.normal(size=(b, s, d)), jnp.float32) * 0.3
+    w = jnp.asarray(rng.normal(size=(d, v)), jnp.float32) * 0.3
+    tv = jnp.asarray(rng.normal(size=(b, s, k)), jnp.float32)
+    ti = jnp.asarray(
+        np.stack([rng.choice(v, k, replace=False)
+                  for _ in range(b * s)]).reshape(b, s, k), jnp.int32)
+    full = (h @ w).astype(jnp.float32)
+    ref = distill.topk_soft_ce(full, tv, ti)
+    got = distill.chunked_topk_distill_ce(h, w, tv, ti, chunk=chunk)
+    np.testing.assert_allclose(float(got), float(ref), rtol=2e-4)
+
+
+def test_chunked_ce_mask():
+    rng = np.random.default_rng(2)
+    h = jnp.asarray(rng.normal(size=(1, 4, 8)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(8, 50)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 50, (1, 4)), jnp.int32)
+    mask = jnp.asarray([[1, 1, 0, 0]], jnp.float32)
+    # masked loss == loss on the unmasked prefix
+    got = distill.chunked_ce(h, w, labels, chunk=16, mask=mask)
+    ref = distill.chunked_ce(h[:, :2], w, labels[:, :2], chunk=16)
+    np.testing.assert_allclose(float(got), float(ref), rtol=1e-5)
+
+
+@given(v=st.integers(10, 400), k=st.integers(1, 9), seed=st.integers(0, 99))
+@settings(max_examples=25, deadline=None)
+def test_topk_compress_properties(v, k, seed):
+    """Property: stored top-k reconstructs the dominant mass exactly."""
+    k = min(k, v)
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(3, v)), jnp.float32) * 3
+    vals, idx = topk_compress(logits, k)
+    # indices are the true top-k
+    ref_idx = np.argsort(-np.asarray(logits), axis=-1)[:, :k]
+    ref_sorted = np.sort(ref_idx, axis=-1)
+    got_sorted = np.sort(np.asarray(idx), axis=-1)
+    assert (ref_sorted == got_sorted).all()
+    # shift-invariance: max stored value is 0 (bf16 storage trick)
+    assert np.allclose(np.asarray(vals).max(-1), 0.0, atol=1e-2)
+    # reconstruction preserves softmax over the top-k support
+    rec = reconstruct(vals, idx, v)
+    p_ref = jax.nn.softmax(logits, -1)
+    p_rec = jax.nn.softmax(rec, -1)
+    topmass_ref = np.take_along_axis(np.asarray(p_ref), ref_idx, -1).sum(-1)
+    # reconstructed distribution concentrates all mass on the stored ids
+    got_mass = np.take_along_axis(np.asarray(p_rec),
+                                  np.asarray(idx), -1).sum(-1)
+    assert np.allclose(got_mass, 1.0, atol=1e-3)
+    # and the relative mass among stored ids matches (renormalized)
+    ref_top = np.take_along_axis(np.asarray(p_ref), np.asarray(idx), -1)
+    ref_top /= ref_top.sum(-1, keepdims=True)
+    got_top = np.take_along_axis(np.asarray(p_rec), np.asarray(idx), -1)
+    np.testing.assert_allclose(got_top, ref_top, atol=5e-3)
+
+
+def test_storage_gain_k20():
+    """Paper: top-20 storage vs full 3,183-senone posteriors ~26x."""
+    assert full_bytes_per_frame(3183) / storage_bytes_per_frame(20) > 10
+
+
+def test_logit_store_roundtrip(tmp_path):
+    store = LogitStore(str(tmp_path), k=4, vocab=100)
+    rng = np.random.default_rng(0)
+    vals = rng.normal(size=(6, 10, 4)).astype(np.float32)
+    idx = rng.integers(0, 100, (6, 10, 4)).astype(np.int32)
+    store.write_shard(0, vals, idx)
+    v2, i2 = store.read_shard(0)
+    assert v2.shape == (6, 10, 4) and i2.shape == (6, 10, 4)
+    np.testing.assert_array_equal(np.asarray(i2), idx)
+    np.testing.assert_allclose(np.asarray(v2, np.float32), vals, atol=1e-2)
+    meta = store.stats()
+    assert meta.n_frames == 60 and meta.k == 4
+
+
+def test_soft_ce_self_is_entropy():
+    """CE(t||t) == H(t): distilling a model into itself gives entropy."""
+    rng = np.random.default_rng(5)
+    lg = jnp.asarray(rng.normal(size=(4, 30)), jnp.float32)
+    p = jax.nn.softmax(lg, -1)
+    ent = -jnp.mean(jnp.sum(p * jnp.log(p + 1e-30), -1))
+    got = distill.soft_ce(lg, lg)
+    np.testing.assert_allclose(float(got), float(ent), rtol=1e-4)

@@ -1,0 +1,149 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret=True."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import (gtc_compress, gtc_compress_ref,
+                           sparse_ce_lse_gather, sparse_ce_lse_gather_ref,
+                           swa_attention, swa_attention_ref,
+                           topk_distill_ce, topk_distill_ce_ref,
+                           topk_logits, topk_logits_ref)
+
+
+# ------------------------------------------------------------ topk_logits
+
+@pytest.mark.parametrize("shape,k", [
+    ((4, 3183), 20),           # the paper's senones, k=20
+    ((2, 3, 500), 5),
+    ((1, 262144), 20),         # gemma3 vocab
+    ((130, 777), 11),          # unaligned rows + vocab
+    ((8, 128), 128),           # k == v_tile edge
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_topk_sweep(shape, k, dtype):
+    rng = np.random.default_rng(hash((shape, k)) % 2**31)
+    x = jnp.asarray(rng.normal(size=shape), dtype)
+    v1, i1 = topk_logits(x, k, interpret=True)
+    v2, i2 = topk_logits_ref(x, k)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+@given(v=st.integers(100, 5000), k=st.integers(1, 20),
+       seed=st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_topk_property(v, k, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(3, v)), jnp.float32)
+    vals, idx = topk_logits(x, k, interpret=True)
+    # every returned value really is at its claimed index, sorted desc
+    picked = np.take_along_axis(np.asarray(x), np.asarray(idx), -1)
+    np.testing.assert_allclose(np.asarray(vals), picked, atol=1e-6)
+    assert (np.diff(np.asarray(vals), axis=-1) <= 1e-6).all()
+
+
+# -------------------------------------------------------------- sparse_ce
+
+@pytest.mark.parametrize("t,d,v,k,cap", [
+    (37, 64, 3183, 20, 0.0),
+    (130, 96, 500, 5, 30.0),
+    (16, 128, 8192, 20, 0.0),
+    (5, 32, 150, 3, 0.0),
+])
+def test_sparse_ce_sweep(t, d, v, k, cap):
+    rng = np.random.default_rng(t * 7 + k)
+    h = jnp.asarray(rng.normal(size=(t, d)), jnp.float32) * 0.1
+    w = jnp.asarray(rng.normal(size=(d, v)), jnp.float32) * 0.1
+    idx = jnp.asarray(np.stack([rng.choice(v, k, replace=False)
+                                for _ in range(t)]), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(t, k)), jnp.float32)
+    l1, g1 = sparse_ce_lse_gather(h, w, idx, softcap=cap, interpret=True)
+    l2, g2 = sparse_ce_lse_gather_ref(h, w, idx, softcap=cap)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=2e-4)
+    c1 = topk_distill_ce(h, w, vals, idx, softcap=cap, interpret=True)
+    c2 = topk_distill_ce_ref(h, w, vals, idx, softcap=cap)
+    np.testing.assert_allclose(float(c1), float(c2), rtol=1e-4)
+
+
+def test_sparse_ce_bf16_inputs():
+    rng = np.random.default_rng(9)
+    h = jnp.asarray(rng.normal(size=(16, 32)), jnp.bfloat16)
+    w = jnp.asarray(rng.normal(size=(32, 300)), jnp.bfloat16)
+    idx = jnp.asarray(rng.integers(0, 300, (16, 4)), jnp.int32)
+    l1, g1 = sparse_ce_lse_gather(h, w, idx, interpret=True)
+    l2, g2 = sparse_ce_lse_gather_ref(h, w, idx)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=2e-2,
+                               atol=2e-2)
+
+
+# ---------------------------------------------------------- swa_attention
+
+@pytest.mark.parametrize("b,hq,hkv,s,hd,w", [
+    (2, 4, 2, 256, 64, 128),
+    (1, 2, 1, 300, 80, 100),       # unaligned everything
+    (1, 1, 1, 512, 128, 512),      # window == seq
+    (2, 2, 2, 64, 32, 16),         # tiny
+    (1, 2, 1, 1024, 128, 384),     # non-tile-multiple window
+])
+def test_swa_sweep(b, hq, hkv, s, hd, w):
+    rng = np.random.default_rng(s + w)
+    q = jnp.asarray(rng.normal(size=(b, hq, s, hd)), jnp.float32) * 0.3
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, hd)), jnp.float32) * 0.3
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, hd)), jnp.float32)
+    o1 = swa_attention(q, k, v, w, interpret=True)
+    o2 = swa_attention_ref(q, jnp.repeat(k, hq // hkv, 1),
+                           jnp.repeat(v, hq // hkv, 1), w)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-4)
+
+
+def test_swa_bf16():
+    rng = np.random.default_rng(11)
+    q = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.bfloat16)
+    o1 = swa_attention(q, k, v, 64, interpret=True)
+    o2 = swa_attention_ref(q, k, v, 64)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=3e-2)
+
+
+def test_swa_window_locality_property():
+    """Tokens beyond the window must not influence the output."""
+    rng = np.random.default_rng(12)
+    s, w = 256, 64
+    q = jnp.asarray(rng.normal(size=(1, 1, s, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, s, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 1, s, 32)), jnp.float32)
+    o1 = swa_attention(q, k, v, w, interpret=True)
+    # perturb k/v OUTSIDE the window of the last query
+    k2 = k.at[:, :, : s - w].set(rng.normal(size=(1, 1, s - w, 32)))
+    v2 = v.at[:, :, : s - w].set(rng.normal(size=(1, 1, s - w, 32)))
+    o2 = swa_attention(q, k2, v2, w, interpret=True)
+    np.testing.assert_allclose(np.asarray(o1[:, :, -1]),
+                               np.asarray(o2[:, :, -1]), atol=1e-5)
+
+
+# ----------------------------------------------------------- gtc_compress
+
+@pytest.mark.parametrize("shape", [(33, 257), (8192,), (3, 5, 7),
+                                   (1, 8193)])
+@pytest.mark.parametrize("tau", [1e-4, 1e-2])
+def test_gtc_kernel_sweep(shape, tau):
+    rng = np.random.default_rng(int(np.prod(shape)))
+    g = jnp.asarray(rng.normal(size=shape), jnp.float32) * 1e-2
+    r = jnp.asarray(rng.normal(size=shape), jnp.float32) * 1e-2
+    s1, r1 = gtc_compress(g, r, tau, interpret=True)
+    s2, r2 = gtc_compress_ref(g, r, tau)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-7)
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), atol=1e-7)
+
+
+def test_gtc_kernel_bf16_grad():
+    rng = np.random.default_rng(13)
+    g = jnp.asarray(rng.normal(size=(64, 64)), jnp.bfloat16) * 0.01
+    r = jnp.zeros((64, 64), jnp.float32)
+    s1, r1 = gtc_compress(g, r, 1e-3, interpret=True)
+    s2, r2 = gtc_compress_ref(g, r, 1e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-6)

@@ -1,0 +1,57 @@
+"""Scheduled learning: the paper's two published schedules, structurally."""
+import pytest
+
+from repro.core import scheduled
+
+
+def test_paper_100k_structure():
+    cfg = scheduled.ScheduleConfig.paper_100k()
+    phases = scheduled.phases(cfg)
+    unl = [p for p in phases if p.kind == "unlabeled"]
+    lab = [p for p in phases if p.kind == "labeled"]
+    assert len(unl) == 4 and len(lab) == 4          # labeled after EVERY
+    assert sum(p.hours for p in unl) == 100_000
+    # chunked for sub-epochs 1-3, full-sequence on the 4th
+    assert [p.chunked for p in unl] == [True, True, True, False]
+
+
+def test_paper_1m_structure():
+    cfg = scheduled.ScheduleConfig.paper_1m()
+    phases = scheduled.phases(cfg)
+    unl = [p for p in phases if p.kind == "unlabeled"]
+    lab = [p for p in phases if p.kind == "labeled"]
+    assert len(unl) == 18
+    assert sum(p.hours for p in unl) == 990_000     # ~1M hours
+    # labeled pass after every 5th sub-epoch (+ final)
+    assert [p.sub_epoch for p in lab] == [5, 10, 15, 18]
+    # chunked for 1-15, fine-tune (full seq) 16-18
+    assert all(p.chunked for p in unl[:15])
+    assert not any(p.chunked for p in unl[15:])
+
+
+def test_lr_decay_and_boost():
+    cfg = scheduled.ScheduleConfig(n_sub_epochs=6, labeled_every=2,
+                                   lr0=1e-3, lr_decay=0.8,
+                                   labeled_lr_boost=1.5)
+    phases = scheduled.phases(cfg)
+    unl = [p for p in phases if p.kind == "unlabeled"]
+    # exponential decay over sub-epochs
+    for i in range(1, len(unl)):
+        assert unl[i].lr == pytest.approx(unl[i - 1].lr * 0.8)
+    # "slightly higher learning rates on the labeled data"
+    for p in phases:
+        if p.kind == "labeled":
+            se = next(u for u in unl if u.sub_epoch == p.sub_epoch)
+            assert p.lr == pytest.approx(se.lr * 1.5)
+
+
+def test_offsets_rotate():
+    cfg = scheduled.ScheduleConfig(n_sub_epochs=9, labeled_every=1,
+                                   n_feature_offsets=3)
+    lab = [p for p in scheduled.phases(cfg) if p.kind == "labeled"]
+    assert [p.feature_offset for p in lab] == [0, 1, 2, 0, 1, 2, 0, 1, 2]
+
+
+def test_describe():
+    txt = scheduled.describe(scheduled.ScheduleConfig.paper_100k())
+    assert "sub-epoch" in txt and "full-seq" in txt

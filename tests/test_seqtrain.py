@@ -1,0 +1,125 @@
+"""Forward-backward / sMBR: exactness vs brute force + invariants."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.seqtrain import (build_denominator_graph, forward_backward,
+                            smbr_loss)
+from repro.seqtrain.fb import forward_log_norm, viterbi
+from repro.seqtrain.graphs import uniform_graph
+from repro.seqtrain.smbr import frame_error_rate
+
+
+def _brute_logz(log_obs, g):
+    t, s = log_obs.shape
+    tot = -np.inf
+    for path in itertools.product(range(s), repeat=t):
+        lp = g.log_init[path[0]] + log_obs[0, path[0]]
+        for i in range(1, t):
+            lp += g.log_trans[path[i - 1], path[i]] + log_obs[i, path[i]]
+        tot = np.logaddexp(tot, lp)
+    return tot
+
+
+def _brute_gamma(log_obs, g):
+    t, s = log_obs.shape
+    logz = _brute_logz(log_obs, g)
+    gamma = np.zeros((t, s))
+    for path in itertools.product(range(s), repeat=t):
+        lp = g.log_init[path[0]] + log_obs[0, path[0]]
+        for i in range(1, t):
+            lp += g.log_trans[path[i - 1], path[i]] + log_obs[i, path[i]]
+        w = np.exp(lp - logz)
+        for i, si in enumerate(path):
+            gamma[i, si] += w
+    return gamma
+
+
+@given(seed=st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_fb_matches_bruteforce(seed):
+    s_, t_ = 3, 5
+    rng = np.random.default_rng(seed)
+    g = uniform_graph(s_, self_loop=0.5)
+    lo = rng.normal(size=(1, t_, s_)).astype(np.float32)
+    gamma, logz = forward_backward(jnp.asarray(lo),
+                                   jnp.asarray(g.log_trans),
+                                   jnp.asarray(g.log_init))
+    np.testing.assert_allclose(float(logz[0]), _brute_logz(lo[0], g),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gamma[0]), _brute_gamma(lo[0], g),
+                               atol=1e-4)
+
+
+def test_gamma_normalized_and_masked():
+    rng = np.random.default_rng(1)
+    g = uniform_graph(5)
+    lo = jnp.asarray(rng.normal(size=(2, 7, 5)), jnp.float32)
+    mask = jnp.asarray([[1, 1, 1, 1, 1, 0, 0], [1, 1, 1, 0, 0, 0, 0]],
+                       jnp.float32)
+    gamma, _ = forward_backward(lo, jnp.asarray(g.log_trans),
+                                jnp.asarray(g.log_init), mask)
+    sums = np.asarray(gamma.sum(-1))
+    np.testing.assert_allclose(sums[0, :5], 1.0, atol=1e-4)
+    np.testing.assert_allclose(sums[0, 5:], 0.0, atol=1e-6)
+    np.testing.assert_allclose(sums[1, 3:], 0.0, atol=1e-6)
+
+
+def test_bigram_graph_stochastic():
+    rng = np.random.default_rng(2)
+    als = [rng.integers(0, 11, rng.integers(4, 30)) for _ in range(40)]
+    g = build_denominator_graph(als, 11, self_loop=0.6)
+    rows = np.exp(g.log_trans).sum(1)
+    np.testing.assert_allclose(rows, 1.0, atol=1e-4)
+    np.testing.assert_allclose(np.exp(g.log_init).sum(), 1.0, atol=1e-4)
+    np.testing.assert_allclose(np.exp(g.log_prior).sum(), 1.0, atol=1e-4)
+    assert np.allclose(np.diag(np.exp(g.log_trans)), 0.6, atol=1e-6)
+
+
+def test_smbr_bounds_and_grad_direction():
+    """-1 <= loss <= 0; pushing logits toward the reference increases
+    expected accuracy (loss decreases)."""
+    rng = np.random.default_rng(3)
+    s_, b_, t_ = 6, 2, 9
+    g = uniform_graph(s_)
+    labels = jnp.asarray(rng.integers(0, s_, (b_, t_)), jnp.int32)
+    logits = jnp.asarray(rng.normal(size=(b_, t_, s_)), jnp.float32)
+    loss, m = smbr_loss(logits, labels, g)
+    assert -1.0 <= float(loss) <= 0.0
+    onehot = jax.nn.one_hot(labels, s_) * 10.0
+    loss_good, _ = smbr_loss(logits + onehot, labels, g)
+    assert float(loss_good) < float(loss)
+    gr = jax.grad(lambda lg: smbr_loss(lg, labels, g)[0])(logits)
+    assert bool(jnp.all(jnp.isfinite(gr)))
+    # gradient should on average push the reference senone logit UP
+    ref_grad = jnp.take_along_axis(gr, labels[..., None], -1)
+    assert float(ref_grad.mean()) < 0      # minimizing loss raises ref logit
+
+
+def test_viterbi_matches_bruteforce():
+    rng = np.random.default_rng(4)
+    s_, t_ = 3, 5
+    g = uniform_graph(s_, self_loop=0.4)
+    lo = rng.normal(size=(1, t_, s_)).astype(np.float32)
+    best, best_lp = None, -np.inf
+    for path in itertools.product(range(s_), repeat=t_):
+        lp = g.log_init[path[0]] + lo[0, 0, path[0]]
+        for i in range(1, t_):
+            lp += g.log_trans[path[i - 1], path[i]] + lo[0, i, path[i]]
+        if lp > best_lp:
+            best, best_lp = path, lp
+    got = viterbi(jnp.asarray(lo), jnp.asarray(g.log_trans),
+                  jnp.asarray(g.log_init))
+    assert tuple(np.asarray(got[0])) == best
+
+
+def test_frame_error_rate():
+    logits = jnp.asarray([[[0.0, 5.0], [5.0, 0.0], [0.0, 5.0]]])
+    labels = jnp.asarray([[1, 0, 0]])
+    assert float(frame_error_rate(logits, labels)) == pytest.approx(1 / 3)
+    mask = jnp.asarray([[1.0, 1.0, 0.0]])
+    assert float(frame_error_rate(logits, labels, mask)) == 0.0
