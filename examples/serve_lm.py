@@ -2,21 +2,22 @@
 
   PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-2b
 
-Exercises the decode path the decode_32k / long_500k dry-run shapes lower:
-prefill a prompt, then batched single-token decode steps against the
-KV/recurrent-state cache.  Works for every assigned arch (attention KV
-ring-buffers for SWA, RG-LRU/xLSTM recurrent states, MLA latent cache).
+Routes through the unified inference engine (``repro.serve``): requests
+are grouped into generation rounds by the latency policy and decoded
+batched against the KV/recurrent-state cache.  Works for every assigned
+arch (attention KV ring-buffers for SWA, RG-LRU/xLSTM recurrent states,
+MLA latent cache).
 """
 import argparse
 import time
+from dataclasses import replace
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ASSIGNED, get_arch, reduced
-from repro.launch.serve import BatchedServer, Request
 from repro.models import build_model
+from repro.serve import LATENCY, THROUGHPUT, TokenServer
 
 
 def main():
@@ -25,29 +26,29 @@ def main():
                     choices=ASSIGNED)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--policy", default="latency",
+                    choices=["latency", "throughput"])
     args = ap.parse_args()
 
     cfg = reduced(get_arch(args.arch))
     print(f"arch={args.arch} (reduced: {cfg.n_layers}L d={cfg.d_model})")
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
-    srv = BatchedServer(cfg, params, batch_slots=args.batch, max_seq=128)
+    policy = (LATENCY if args.policy == "latency" else THROUGHPUT)
+    policy = replace(policy, max_batch=args.batch)
+    srv = TokenServer(cfg, params, policy=policy, max_seq=128)
 
     rng = np.random.default_rng(0)
-    reqs = [Request(i, rng.integers(1, cfg.vocab_size, 5),
-                    max_new=args.max_new) for i in range(args.batch * 2)]
+    rids = [srv.submit(rng.integers(1, cfg.vocab_size, 5),
+                       max_new=args.max_new) for _ in range(args.batch * 2)]
     t0 = time.time()
-    pending = list(reqs)
-    while pending or any(s is not None for s in srv.slots):
-        while pending and srv.submit(pending[0]):
-            pending.pop(0)
-        srv.step()
+    done = srv.drain()
     dt = time.time() - t0
-    tok = sum(len(r.out) for r in reqs)
-    print(f"{len(reqs)} requests, {tok} tokens in {dt:.1f}s "
+    tok = sum(len(done[r].out) for r in rids)
+    print(f"{len(rids)} requests, {tok} tokens in {dt:.1f}s "
           f"({tok/dt:.1f} tok/s on CPU, reduced config)")
-    for r in reqs[:3]:
-        print(f"  req {r.rid}: {r.out[:8]}...")
+    for r in rids[:3]:
+        print(f"  req {r}: {done[r].out[:8]}...")
 
 
 if __name__ == "__main__":

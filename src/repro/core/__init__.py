@@ -1,3 +1,14 @@
-from repro.core import distill, logit_store, scheduled, teacher
+import importlib
+
+from repro.core import distill, logit_store, scheduled
 
 __all__ = ["distill", "logit_store", "scheduled", "teacher"]
+
+
+def __getattr__(name):
+    # lazy: teacher pulls in repro.serve (whose decode path imports
+    # launch.steps -> repro.core) — eager import here would be a cycle.
+    # import_module (not `from ... import`) avoids __getattr__ recursion.
+    if name == "teacher":
+        return importlib.import_module("repro.core.teacher")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

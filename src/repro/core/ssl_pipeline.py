@@ -249,7 +249,8 @@ class SSLPipeline:
                            k=pc.topk, vocab=pc.n_senones)
         batches = self._batches(self.rng_unlabeled, chunked=True, seed=7)
         paths = runner.generate_to_store(
-            store, ({"feats": jnp.asarray(b["feats"])} for b in batches))
+            store, ({"feats": jnp.asarray(b["feats"]),
+                     "mask": jnp.asarray(b["mask"])} for b in batches))
         meta = store.stats()
         full = meta.n_frames * pc.n_senones * 4
         packed = meta.n_frames * (pc.topk * 6)

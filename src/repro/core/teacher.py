@@ -1,51 +1,94 @@
 """Teacher-side target generation (paper §3.1-3.2).
 
 The teacher (bidirectional LSTM for the AM; any built model for LLM archs)
-runs inference over unlabeled batches and emits top-k logits into the
+runs inference over unlabeled data and emits top-k logits into the
 LogitStore.  Generation is embarrassingly parallel over workers — exactly
 the property the paper engineered for ("parallelize target generation"):
 no decoder, no confidence model, no LM.
+
+All decode loops live in ``repro.serve.StreamingEngine``; this module is
+the thin target-generation consumer: pre-formed dict batches go through
+``engine.forward_topk`` (the trainer's chunked batches), and the raw
+utterance firehose goes through the engine's bucketed queue
+(``generate_corpus_to_store``) — the paper's batch-inference-as-a-service
+framing.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
 from repro.core import logit_store as ls
-from repro.models import build_model
+from repro.serve import THROUGHPUT, BatchPolicy, StreamingEngine
 
 
 class TeacherRunner:
-    def __init__(self, cfg, params, *, k: int = 20, temperature: float = 1.0):
+    def __init__(self, cfg, params, *, k: int = 20, temperature: float = 1.0,
+                 policy: BatchPolicy = THROUGHPUT, topk_impl: str = "lax"):
         self.cfg = cfg
-        self.model = build_model(cfg)
-        self.params = params
         self.k = k
         self.temperature = temperature
-        self._fwd = jax.jit(self._forward)
-
-    def _forward(self, params, batch):
-        if self.cfg.family == "lstm_am":
-            h, _ = self.model.apply(params, batch["feats"])
-        elif self.cfg.encoder is not None:
-            h, _ = self.model.apply(params, batch["tokens"],
-                                    enc_embeds=batch["enc_embeds"])
-        else:
-            h, _ = self.model.apply(params, batch["tokens"])
-        logits = self.model.unembed(params, h) / self.temperature
-        return ls.topk_compress(logits, self.k)
+        self.engine = StreamingEngine(cfg, params, k=k,
+                                      temperature=temperature, policy=policy,
+                                      topk_impl=topk_impl)
+        self.model = self.engine.model
+        self.params = params
 
     def generate(self, batch):
-        """-> (vals (B,S,k) bf16, idx (B,S,k) int32)."""
-        return self._fwd(self.params, batch)
+        """One pre-formed batch -> (vals (B,S,k) bf16, idx (B,S,k) int32)."""
+        return self.engine.forward_topk(batch)
 
     def generate_to_store(self, store: ls.LogitStore, batches,
                           shard_offset: int = 0):
+        """Pre-formed dict batches -> one store shard each (trainer-aligned
+        shard layout: shard i holds batch i's frames)."""
         paths = []
         for i, batch in enumerate(batches):
             vals, idx = self.generate(batch)
             paths.append(store.write_shard(shard_offset + i, vals, idx))
         return paths
+
+    def generate_corpus_to_store(self, store: ls.LogitStore, utterances,
+                                 shard_offset: int = 0,
+                                 wave: int = 0):
+        """The firehose path: raw (T, F) utterances -> bucketed batched
+        inference -> one shard per utterance, numbered in submission
+        order.  Returns the shard paths (submission order).
+
+        ``utterances`` may be any iterable (including a generator — the
+        1M-hour firehose is streamed, never materialized): work proceeds
+        in waves of ``wave`` utterances (default: one policy batch), each
+        wave's shards flushed to disk before the next is read, so host
+        memory on both the input and output side stays bounded by one
+        wave.
+
+        Failure contract: if a wave's forward or a shard write raises,
+        retry by re-running the *whole call* with the same corpus and
+        shard_offset — shard contents are deterministic, so rewriting
+        already-written shards is idempotent.  Each call is
+        self-contained: stale work left queued by a failed call is
+        discarded up front (its ordinals belong to that call's
+        numbering).
+        """
+        wave = wave or self.engine.policy.max_batch
+        self.engine.queue.discard_pending()
+        self.engine.queue.pop_completed()
+        it = iter(utterances)
+        paths = {}
+        j = 0
+        while True:
+            submitted = 0
+            for u in it:
+                self.engine.submit(u, meta={"ordinal": j})
+                j += 1
+                submitted += 1
+                if submitted == wave:
+                    break
+            if not submitted:
+                break
+            for r in self.engine.run().values():
+                o = r.meta["ordinal"]
+                paths[o] = store.write_shard(
+                    shard_offset + o, r.vals[None], r.idx[None],
+                    utt_lens=[r.vals.shape[0]])
+        return [paths[o] for o in sorted(paths)]
 
 
 def make_teacher_config(student_cfg):

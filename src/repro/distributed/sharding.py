@@ -53,6 +53,8 @@ def batch_spec(mesh: Mesh, batch: int, extra_dims: int = 1,
     else:
         fa = fsdp_axes(mesh)
         cand = _fit(batch, [fa, fa[-1:], None], mesh)
+    if isinstance(cand, tuple) and len(cand) == 1:
+        cand = cand[0]
     return P(cand, *([None] * extra_dims))
 
 

@@ -1,102 +1,95 @@
-"""Batched serving loop: prefill + decode with a continuous request queue.
+"""Online serving entrypoint: the unified engine under a latency policy.
 
-The paper's system is a training system; serving here exists because the
-assigned decode shapes (decode_32k, long_500k) lower `serve_step`, and to
-exercise KV-cache sharding end-to-end on CPU at reduced scale.
+All decode machinery lives in ``repro.serve`` — this module is the CLI.
+Token LMs go through ``serve.TokenServer`` (generation-round batched
+decode over the uniform cache surface); the acoustic model goes through
+``serve.StreamingEngine``'s slot-based streaming path (chunked audio with
+carried LSTM state).
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b
+  PYTHONPATH=src python -m repro.launch.serve --arch lstm-am-7khr
 """
 from __future__ import annotations
 
 import argparse
 import time
-from dataclasses import dataclass, field
-from typing import List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, reduced
-from repro.launch.steps import make_serve_step
 from repro.models import build_model
+from repro.models.api import supports_streaming
+from repro.serve import LATENCY, BatchPolicy, StreamingEngine, TokenServer
 
 
-@dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray
-    max_new: int = 16
-    out: List[int] = field(default_factory=list)
-    done: bool = False
+def serve_tokens(cfg, params, *, n_requests: int = 6, max_new: int = 8,
+                 policy: BatchPolicy = LATENCY, seed: int = 0):
+    srv = TokenServer(cfg, params, policy=policy, max_seq=128)
+    rng = np.random.default_rng(seed)
+    rids = [srv.submit(rng.integers(1, cfg.vocab_size, rng.integers(3, 10)),
+                       max_new=max_new) for _ in range(n_requests)]
+    t0 = time.time()
+    done = srv.drain()
+    dt = time.time() - t0
+    total = sum(len(done[r].out) for r in rids)
+    print(f"[serve] {n_requests} requests, {total} tokens "
+          f"in {dt:.2f}s ({total / dt:.1f} tok/s)")
+    for r in rids:
+        print(f"  req {r}: {done[r].out}")
+    return done
 
 
-class BatchedServer:
-    """Static-batch server: fixed B slots, per-slot request lifecycle.
+def serve_batch(cfg, params, *, n_requests: int = 6,
+                policy: BatchPolicy = LATENCY, seed: int = 0):
+    """Batched full-utterance AM serving — the path for bidirectional
+    models, which have no streaming form."""
+    eng = StreamingEngine(cfg, params, k=10, policy=policy)
+    rng = np.random.default_rng(seed)
+    rids = [eng.submit(rng.normal(size=(int(rng.integers(24, 96)),
+                                        cfg.feat_dim)).astype(np.float32))
+            for _ in range(n_requests)]
+    t0 = time.time()
+    res = eng.run()
+    dt = time.time() - t0
+    frames = sum(res[r].vals.shape[0] for r in rids)
+    print(f"[serve] {n_requests} utterances, {frames} frames batched "
+          f"in {dt:.2f}s ({frames / dt:.0f} frames/s)")
+    return res
 
-    Prefill is run per-request (sequence form), decode steps are batched
-    across slots — the standard static-batching serving shape; slots free
-    as requests finish and are refilled from the queue.
-    """
 
-    def __init__(self, cfg, params, *, batch_slots: int = 4,
-                 max_seq: int = 256, cache_dtype=jnp.bfloat16):
-        self.cfg = cfg
-        self.model = build_model(cfg)
-        self.params = params
-        self.b = batch_slots
-        self.max_seq = max_seq
-        self.cache = self.model.init_cache(batch_slots, max_seq, cache_dtype)
-        self.slots: List[Optional[Request]] = [None] * batch_slots
-        self.serve = jax.jit(make_serve_step(self.model, cfg))
-        self._tokens = jnp.zeros((batch_slots, 1), jnp.int32)
-
-    def _prefill_slot(self, slot: int, req: Request):
-        """Feed the prompt token-by-token through decode (slot-isolated).
-
-        Per-slot prefill via the decode path keeps the cache layout
-        identical for all slots; a production server would use the
-        prefill_step + cache splice instead.
-        """
-        for t in req.prompt:
-            tok = self._tokens.at[slot, 0].set(int(t))
-            nxt, _, self.cache = self.serve(self.params, self.cache, tok)
-            self._tokens = tok
-        self.slots[slot] = req
-
-    def submit(self, req: Request) -> bool:
-        for i, s in enumerate(self.slots):
-            if s is None:
-                self._prefill_slot(i, req)
-                return True
-        return False
-
-    def step(self):
-        """One batched decode step for all active slots."""
-        nxt, logits, self.cache = self.serve(self.params, self.cache,
-                                             self._tokens)
-        self._tokens = nxt
-        for i, req in enumerate(self.slots):
-            if req is None or req.done:
-                continue
-            tok = int(nxt[i, 0])
-            req.out.append(tok)
-            if len(req.out) >= req.max_new:
-                req.done = True
-                self.slots[i] = None
-        return nxt
-
-    def drain(self, max_steps: int = 64):
-        for _ in range(max_steps):
-            if all(s is None for s in self.slots):
-                break
-            self.step()
+def serve_stream(cfg, params, *, n_streams: int = 3, chunk: int = 16,
+                 policy: BatchPolicy = LATENCY, seed: int = 0):
+    """Streaming AM serving: concurrent audio streams, chunked frames,
+    top-k senone posteriors per frame."""
+    eng = StreamingEngine(cfg, params, k=10, policy=policy,
+                          n_slots=n_streams)
+    rng = np.random.default_rng(seed)
+    utts = [rng.normal(size=(int(rng.integers(2, 5)) * chunk, cfg.feat_dim)
+                       ).astype(np.float32) for _ in range(n_streams)]
+    sids = [eng.open_stream() for _ in range(n_streams)]
+    got = {s: 0 for s in sids}
+    t0 = time.time()
+    step = 0
+    while any(got[s] < u.shape[0] for s, u in zip(sids, utts)):
+        chunks = {s: u[got[s]:got[s] + chunk]
+                  for s, u in zip(sids, utts) if got[s] < u.shape[0]}
+        out = eng.feed(chunks)
+        for s in out:
+            got[s] += chunks[s].shape[0]
+        step += 1
+    dt = time.time() - t0
+    frames = sum(u.shape[0] for u in utts)
+    print(f"[serve] {n_streams} streams, {frames} frames in {step} "
+          f"batched steps, {dt:.2f}s ({frames / dt:.0f} frames/s)")
+    for s in sids:
+        eng.close_stream(s)
+    return got
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
-    ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=8)
     args = ap.parse_args(argv)
@@ -104,22 +97,14 @@ def main(argv=None):
     cfg = reduced(get_arch(args.arch))
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
-    srv = BatchedServer(cfg, params, batch_slots=4, max_seq=128)
-    rng = np.random.default_rng(0)
-    reqs = [Request(i, rng.integers(1, cfg.vocab_size, rng.integers(3, 10)),
-                    max_new=args.max_new) for i in range(args.requests)]
-    t0 = time.time()
-    pending = list(reqs)
-    while pending or any(s is not None for s in srv.slots):
-        while pending and srv.submit(pending[0]):
-            pending.pop(0)
-        srv.step()
-    dt = time.time() - t0
-    total = sum(len(r.out) for r in reqs)
-    print(f"[serve] {args.requests} requests, {total} tokens "
-          f"in {dt:.2f}s ({total/dt:.1f} tok/s)")
-    for r in reqs:
-        print(f"  req {r.rid}: {r.out}")
+    if cfg.family == "lstm_am":
+        if supports_streaming(cfg):
+            serve_stream(cfg, params, n_streams=args.requests)
+        else:                       # bidirectional: batch path only
+            serve_batch(cfg, params, n_requests=args.requests)
+    else:
+        serve_tokens(cfg, params, n_requests=args.requests,
+                     max_new=args.max_new)
 
 
 if __name__ == "__main__":

@@ -6,6 +6,12 @@
   unembed(params, hidden) -> float32 logits
   init_cache(batch, seq_len, dtype) / decode_step(params, cache, tokens)
 
+Streaming surface (frame-synchronous models; ``supports_streaming(cfg)``):
+  init_stream_state(batch, dtype) -> per-stream recurrent state pytree
+  stream_step(params, state, feats, lens=) -> (hidden, state)
+Chunked stream_step calls are exactly equivalent to one full apply() —
+the serving engine (``repro.serve``) carries this state per stream.
+
 ``input_specs(cfg, shape, ...)`` -> dict of jax.ShapeDtypeStruct stand-ins
 for every model input of a (arch x shape) pair: weak-type-correct, shardable,
 no device allocation.
@@ -27,6 +33,13 @@ def build_model(cfg: ModelConfig):
     if cfg.encoder is not None:
         return Whisper(cfg)
     return Transformer(cfg)
+
+
+def supports_streaming(cfg: ModelConfig) -> bool:
+    """True iff build_model(cfg) exposes the streaming surface
+    (init_stream_state / stream_step): causal frame-synchronous models."""
+    from repro.models.lstm_am import is_bidirectional
+    return cfg.family == "lstm_am" and not is_bidirectional(cfg)
 
 
 def _sds(shape, dtype):

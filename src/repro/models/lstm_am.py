@@ -14,10 +14,16 @@ import jax.numpy as jnp
 from repro.models import layers, recurrent
 
 
+def is_bidirectional(cfg) -> bool:
+    """Single source of truth for the AM's directionality (the streaming
+    surface in models/api.py keys off the same predicate)."""
+    return any(m == "bilstm" for m in cfg.mixers())
+
+
 class LstmAM:
     def __init__(self, cfg):
         self.cfg = cfg
-        self.bidirectional = any(m == "bilstm" for m in cfg.mixers())
+        self.bidirectional = is_bidirectional(cfg)
         self.n_layers = cfg.n_layers
 
     def init(self, key):
@@ -41,18 +47,26 @@ class LstmAM:
                 d_in = cfg.lstm_hidden
         return params
 
-    def apply(self, params, feats, *, state=None, positions=None):
-        """feats (B,T,F) -> (hidden (B,T,H), aux). state: list of (h,c)."""
+    def apply(self, params, feats, *, state=None, positions=None, lens=None):
+        """feats (B,T,F) -> (hidden (B,T,H), aux). state: list of (h,c).
+
+        lens (B,) optional valid lengths for padded batches: recurrent
+        state freezes at each row's length and the backward direction of a
+        biLSTM starts at the last valid frame, so batched outputs match
+        per-utterance runs on the valid region (see recurrent.lstm_apply).
+        """
         x = feats
         new_state = []
         for i in range(self.n_layers):
             if self.bidirectional:
                 x = recurrent.bilstm_apply(params[f"l{i}"]["fwd"],
-                                           params[f"l{i}"]["bwd"], x)
+                                           params[f"l{i}"]["bwd"], x,
+                                           lens=lens)
                 new_state.append(None)
             else:
                 st = None if state is None else state[i]
-                x, st = recurrent.lstm_apply(params[f"l{i}"], x, st)
+                x, st = recurrent.lstm_apply(params[f"l{i}"], x, st,
+                                             lens=lens)
                 new_state.append(st)
         return x, {"state": new_state if not self.bidirectional else None}
 
@@ -73,3 +87,26 @@ class LstmAM:
         return [(jnp.zeros((batch, h), dtype), jnp.zeros((batch, h),
                                                          jnp.float32))
                 for _ in range(self.n_layers)]
+
+    # ------------------------------------------------- streaming surface
+    # Chunked online inference: feed arbitrary-length feature chunks, carry
+    # the per-layer (h, c) pytree across calls.  Feeding an utterance in
+    # chunks is exactly equivalent to one full-utterance apply().
+
+    def init_stream_state(self, batch, dtype=jnp.float32):
+        """Fresh per-stream recurrent state (batch = concurrent streams)."""
+        if self.bidirectional:
+            raise ValueError(
+                "bidirectional AM has no streaming form; use the batched "
+                "full-utterance path (serve.StreamingEngine.run)")
+        return self.init_state(batch, dtype)
+
+    def stream_step(self, params, state, feats, *, lens=None):
+        """One streaming chunk: feats (B,T,F) -> (hidden (B,T,H), state).
+
+        lens (B,) marks each stream's valid frames within the chunk;
+        shorter streams' states freeze at their length, so ragged chunks
+        batch safely.
+        """
+        h, aux = self.apply(params, feats, state=state, lens=lens)
+        return h, aux["state"]

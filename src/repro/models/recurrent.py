@@ -35,26 +35,72 @@ def lstm_cell(params, x_t, h, c):
     return h.astype(x_t.dtype), c
 
 
-def lstm_apply(params, x, state=None):
-    """x (B,S,D) -> (B,S,H). state: optional (h, c) carried (chunked BPTT)."""
+def lstm_apply(params, x, state=None, lens=None):
+    """x (B,S,D) -> (B,S,H). state: optional (h, c) carried (chunked BPTT).
+
+    lens (B,) optional valid lengths: the carried (h, c) freezes once a
+    row passes its length, so a padded batch hands back exactly the state
+    an unpadded per-row run would (the serving engine's batching
+    invariant).  Outputs past a row's length are unspecified — callers
+    mask or slice them.
+    """
     b = x.shape[0]
     d_h = params["wh"].shape[0]
     if state is None:
         state = (jnp.zeros((b, d_h), x.dtype), jnp.zeros((b, d_h), jnp.float32))
 
-    def step(carry, x_t):
-        h, c = carry
-        h, c = lstm_cell(params, x_t, h, c)
-        return (h, c), h
+    if lens is None:
+        def step(carry, x_t):
+            h, c = carry
+            h, c = lstm_cell(params, x_t, h, c)
+            return (h, c), h
 
-    (h, c), ys = jax.lax.scan(step, state, x.transpose(1, 0, 2))
+        (h, c), ys = jax.lax.scan(step, state, x.transpose(1, 0, 2))
+        return ys.transpose(1, 0, 2), (h, c)
+
+    mask = (jnp.arange(x.shape[1])[None, :] < lens[:, None])   # (B,S)
+
+    def step(carry, xm):
+        x_t, m_t = xm
+        h, c = carry
+        h2, c2 = lstm_cell(params, x_t, h, c)
+        h = jnp.where(m_t, h2, h)
+        c = jnp.where(m_t, c2, c)
+        return (h, c), h2
+
+    (h, c), ys = jax.lax.scan(
+        step, state, (x.transpose(1, 0, 2), mask.T[..., None]))
     return ys.transpose(1, 0, 2), (h, c)
 
 
-def bilstm_apply(fwd_params, bwd_params, x):
-    yf, _ = lstm_apply(fwd_params, x)
-    yb, _ = lstm_apply(bwd_params, x[:, ::-1])
-    return jnp.concatenate([yf, yb[:, ::-1]], axis=-1)
+def masked_reverse(x, lens):
+    """Reverse each row's first lens[b] steps along time; zero the tail.
+
+    x (B,S,...), lens (B,) -> same shape.  Involution on the valid region:
+    applying it twice restores the input (used to run the backward LSTM of
+    a biLSTM over ragged batches without reading padding).
+    """
+    s = x.shape[1]
+    ar = jnp.arange(s)
+    idx = jnp.clip(lens[:, None] - 1 - ar[None, :], 0, s - 1)   # (B,S)
+    idx = idx.reshape(idx.shape + (1,) * (x.ndim - 2))
+    rev = jnp.take_along_axis(x, idx, axis=1)
+    mask = (ar[None, :] < lens[:, None]).reshape(
+        x.shape[:2] + (1,) * (x.ndim - 2))
+    return jnp.where(mask, rev, jnp.zeros((), x.dtype))
+
+
+def bilstm_apply(fwd_params, bwd_params, x, lens=None):
+    """Bidirectional LSTM.  With lens, the backward pass starts at each
+    row's last *valid* frame, so padded batches match per-row runs on the
+    valid region (positions past lens are unspecified)."""
+    if lens is None:
+        yf, _ = lstm_apply(fwd_params, x)
+        yb, _ = lstm_apply(bwd_params, x[:, ::-1])
+        return jnp.concatenate([yf, yb[:, ::-1]], axis=-1)
+    yf, _ = lstm_apply(fwd_params, x, lens=lens)
+    yb, _ = lstm_apply(bwd_params, masked_reverse(x, lens), lens=lens)
+    return jnp.concatenate([yf, masked_reverse(yb, lens)], axis=-1)
 
 
 # ================================================================= RG-LRU

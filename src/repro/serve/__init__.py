@@ -1,0 +1,24 @@
+"""Unified batched streaming-inference engine (paper §3.2.2 framing:
+teacher target generation and online serving are the same workload under
+different batching policies).
+
+  StreamingEngine — bucketed batch inference + per-stream chunked
+      streaming with carried LSTM state, top-k logit emission.
+  TokenServer — generation-round batched decode for the token-LM
+      serving surface (launch/serve.py, examples/serve_lm.py).
+  BatchPolicy / THROUGHPUT / LATENCY — batch-formation policies.
+"""
+from repro.serve.batcher import (LATENCY, THROUGHPUT, BatchPolicy,
+                                 FormedBatch, bucket_length, form_batches,
+                                 padding_efficiency)
+from repro.serve.decode import TokenRequest, TokenServer
+from repro.serve.engine import StreamingEngine, make_topk_emitter
+from repro.serve.request import (CompletedRequest, InferenceRequest,
+                                 RequestQueue)
+
+__all__ = [
+    "BatchPolicy", "THROUGHPUT", "LATENCY", "FormedBatch", "bucket_length",
+    "form_batches", "padding_efficiency", "StreamingEngine",
+    "make_topk_emitter", "TokenServer", "TokenRequest", "InferenceRequest",
+    "CompletedRequest", "RequestQueue",
+]

@@ -1,0 +1,109 @@
+"""Dynamic bucketing / padding-aware batch formation.
+
+The cost of a padded batch is ``B * T_bucket`` frames of compute for
+``sum(lens)`` useful frames; the compile cost is one XLA program per
+distinct (B, T_bucket) shape.  The batcher trades the two off:
+
+  * lengths are rounded up to a multiple of ``bucket_multiple`` (few
+    distinct T shapes -> few compiles),
+  * requests are sorted by length and greedily packed so near-equal
+    lengths share a batch (little padding waste),
+  * the batch dim is always padded to ``max_batch`` with zero-length
+    dummy rows (exactly one (B, T) shape per bucket length; masked rows
+    cost compute but no recompilation — the standard serving trade).
+
+Two shipped policies mirror the engine's two consumers: THROUGHPUT packs
+big batches for the teacher's offline firehose (paper §3.2.2 target
+generation); LATENCY keeps batches small and never waits for more work
+than the queue already holds, for online serving.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.serve.request import InferenceRequest
+
+
+@dataclass(frozen=True)
+class BatchPolicy:
+    """How the batcher groups pending requests.
+
+    max_batch: rows per formed batch (batch dim is padded to this).
+    bucket_multiple: time-length rounding quantum (padding/compile trade).
+    sort_by_length: pack near-equal lengths together (throughput) or
+        preserve arrival order (latency fairness).
+    """
+    name: str
+    max_batch: int = 16
+    bucket_multiple: int = 64
+    sort_by_length: bool = True
+
+
+THROUGHPUT = BatchPolicy("throughput", max_batch=16, bucket_multiple=64,
+                         sort_by_length=True)
+LATENCY = BatchPolicy("latency", max_batch=4, bucket_multiple=16,
+                      sort_by_length=False)
+
+
+def bucket_length(t: int, multiple: int) -> int:
+    """Round t up to the bucket grid (at least one multiple)."""
+    return max(multiple, ((t + multiple - 1) // multiple) * multiple)
+
+
+@dataclass
+class FormedBatch:
+    """A padded, mask-annotated batch ready for one engine forward."""
+    requests: List[InferenceRequest]
+    feats: np.ndarray               # (max_batch, T_bucket, F) float32
+    lens: np.ndarray                # (max_batch,) int32; 0 for dummy rows
+
+    @property
+    def n_real(self) -> int:
+        return len(self.requests)
+
+    @property
+    def frames(self) -> int:
+        return int(self.lens.sum())
+
+    @property
+    def padded_frames(self) -> int:
+        return int(self.feats.shape[0] * self.feats.shape[1])
+
+
+def form_batches(requests: Sequence[InferenceRequest],
+                 policy: BatchPolicy) -> List[FormedBatch]:
+    """Group requests into padded batches under the policy.
+
+    Every request appears in exactly one batch; within a batch, rows are
+    padded to the longest member's bucketed length.
+    """
+    if not requests:
+        return []
+    order = list(requests)
+    if policy.sort_by_length:
+        # stable: equal lengths keep arrival order
+        order.sort(key=lambda r: r.length)
+    feat_dim = order[0].feats.shape[1]
+
+    batches: List[FormedBatch] = []
+    for lo in range(0, len(order), policy.max_batch):
+        group = order[lo:lo + policy.max_batch]
+        t_bucket = bucket_length(max(r.length for r in group),
+                                 policy.bucket_multiple)
+        feats = np.zeros((policy.max_batch, t_bucket, feat_dim), np.float32)
+        lens = np.zeros((policy.max_batch,), np.int32)
+        for i, r in enumerate(group):
+            feats[i, :r.length] = r.feats
+            lens[i] = r.length
+        batches.append(FormedBatch(group, feats, lens))
+    return batches
+
+
+def padding_efficiency(batches: Sequence[FormedBatch]) -> float:
+    """Useful frames / computed frames over a set of formed batches."""
+    useful = sum(b.frames for b in batches)
+    total = sum(b.padded_frames for b in batches)
+    return useful / max(total, 1)

@@ -1,0 +1,151 @@
+"""Slot-based batched decode engine for the token-LM serving surface.
+
+Every assigned arch exposes the uniform ``init_cache``/``decode_step``
+surface, but the cache keeps a *single scalar position shared by all
+batch rows* — so rows of one batch must advance in lockstep.  The seed
+``BatchedServer`` prefilled one slot at a time through the shared decode
+step, silently appending garbage KV entries to every other active slot's
+cache.  This engine replaces that with **generation rounds** that are
+correct under the shared position:
+
+  * requests are grouped by *exactly equal prompt length* (the batcher's
+    bucketing, degenerate bucket size 1), up to ``policy.max_batch`` rows;
+  * a round prefills all its rows together token-by-token (each row feeds
+    its own prompt token — no cross-row pollution), then decodes batched
+    until every row hit its ``max_new``;
+  * rows that finish early keep stepping on their own cache (harmless:
+    rows only ever read their own cache rows) with outputs discarded.
+
+Under the LATENCY policy rounds are small and start as soon as work
+exists; THROUGHPUT packs full rounds.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.steps import make_serve_step
+from repro.models import build_model
+from repro.serve.batcher import LATENCY, BatchPolicy
+
+
+@dataclass
+class TokenRequest:
+    rid: int
+    prompt: np.ndarray              # (L,) int32
+    max_new: int = 16
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class TokenServer:
+    """Generation-round batched decoding over the uniform decode surface."""
+
+    def __init__(self, cfg, params, *, policy: BatchPolicy = LATENCY,
+                 max_seq: int = 256, cache_dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.policy = policy
+        self.max_seq = max_seq
+        self.cache_dtype = cache_dtype
+        self.b = policy.max_batch
+        self.serve = jax.jit(make_serve_step(self.model, cfg))
+        self._pending: deque[TokenRequest] = deque()
+        self._next_rid = 0
+        self._completed: Dict[int, TokenRequest] = {}
+
+    def submit(self, prompt: np.ndarray, max_new: int = 16) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.ndim != 1 or prompt.shape[0] < 1:
+            raise ValueError(
+                f"expected a non-empty 1-D token prompt, got shape "
+                f"{prompt.shape}")
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        if prompt.shape[0] + max_new - 1 > self.max_seq:
+            # a round writes plen prefill entries + (max_new - 1) decode
+            # entries (the last token is emitted without a step); past
+            # max_seq the shared cache position wraps its ring buffer
+            # silently (attention_decode: slot = pos % slots) — refuse
+            # rather than return corrupted output
+            raise ValueError(
+                f"prompt ({prompt.shape[0]}) + max_new ({max_new}) needs "
+                f"{prompt.shape[0] + max_new - 1} cache entries > max_seq "
+                f"({self.max_seq})")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._pending.append(TokenRequest(rid, prompt, max_new))
+        return rid
+
+    def _next_round(self) -> List[TokenRequest]:
+        """Pop up to max_batch pending requests of one equal prompt
+        length (arrival order decides which length goes first)."""
+        if not self._pending:
+            return []
+        length = self._pending[0].prompt.shape[0]
+        round_, keep = [], deque()
+        while self._pending:
+            r = self._pending.popleft()
+            if r.prompt.shape[0] == length and len(round_) < self.b:
+                round_.append(r)
+            else:
+                keep.append(r)
+        self._pending = keep
+        return round_
+
+    def _run_round(self, round_: List[TokenRequest]):
+        plen = round_[0].prompt.shape[0]
+        cache = self.model.init_cache(self.b, self.max_seq, self.cache_dtype)
+        prompts = np.zeros((self.b, plen), np.int32)
+        for i, r in enumerate(round_):
+            prompts[i] = r.prompt
+        prompts = jnp.asarray(prompts)
+        # batched prefill through the decode path: each row feeds its own
+        # prompt token, so caches stay row-pure
+        for t in range(plen):
+            nxt, _, cache = self.serve(self.params, cache,
+                                       prompts[:, t:t + 1])
+        tokens = nxt
+        for _ in range(max(r.max_new for r in round_)):
+            host_tok = np.asarray(tokens)   # one device->host sync per step
+            for i, r in enumerate(round_):
+                if not r.done:
+                    r.out.append(int(host_tok[i, 0]))
+                    if len(r.out) >= r.max_new:
+                        r.done = True
+            if all(r.done for r in round_):
+                break
+            nxt, _, cache = self.serve(self.params, cache, tokens)
+            tokens = nxt
+        for r in round_:
+            r.done = True
+            self._completed[r.rid] = r
+
+    def drain(self) -> Dict[int, TokenRequest]:
+        """Run rounds until no pending work remains.  Returns (and
+        evicts) the requests completed since the last drain — like
+        StreamingEngine.run, the server's ledger must not grow with
+        uptime."""
+        while self._pending:
+            round_ = self._next_round()
+            if not round_:
+                break
+            try:
+                self._run_round(round_)
+            except BaseException:
+                # a failed step must not strand the round: reset partial
+                # outputs and put the requests back for retry (same
+                # invariant as StreamingEngine.run / restore_in_flight)
+                for r in round_:
+                    r.out.clear()
+                    r.done = False
+                self._pending.extendleft(reversed(round_))
+                raise
+        done, self._completed = self._completed, {}
+        return done

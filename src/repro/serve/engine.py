@@ -1,0 +1,237 @@
+"""Batched streaming-inference engine.
+
+One engine, two consumers (the paper's framing: target generation *is*
+inference-as-a-service):
+
+  * **Teacher target generation** (paper §3.2.2): submit the unlabeled
+    firehose as per-utterance requests; the batcher buckets them into
+    padded batches (THROUGHPUT policy), one jitted forward per bucket
+    shape emits top-k logits, and the caller drains results into the
+    LogitStore.  Embarrassingly parallel across engine instances — the
+    paper's "parallelize target generation".
+  * **Online serving**: the same engine under a LATENCY policy, plus a
+    slot-based *streaming* path that carries each stream's LSTM (h, c)
+    across chunks, so audio can be fed incrementally with batched compute
+    across concurrent streams.
+
+Length correctness is delegated to the model's ``lens`` support
+(``models/recurrent.py``): padded rows freeze their recurrent state at
+their true length and the biLSTM backward pass starts at the last valid
+frame, so batched == sequential to fp tolerance (pinned by
+tests/test_serve_engine.py).
+
+Top-k emission reuses ``kernels/topk_logits`` (the Pallas selection
+kernel) when ``topk_impl="kernel"``; the default "lax" path is the
+``logit_store.topk_compress`` codec (same output format — shifted bf16
+values + int32 indices).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import logit_store as ls
+from repro.kernels.topk_logits import topk_logits
+from repro.launch import steps
+from repro.models import build_model
+from repro.models.api import supports_streaming
+from repro.serve.batcher import (LATENCY, THROUGHPUT, BatchPolicy,
+                                 bucket_length, form_batches)
+from repro.serve.request import CompletedRequest, RequestQueue
+
+
+def make_topk_emitter(k: int, impl: str = "lax", *, interpret: bool = True):
+    """logits (..., V) -> (vals (..., k) bf16 shifted, idx (..., k) i32).
+
+    impl="kernel" routes selection through the Pallas tile kernel
+    (``kernels/topk_logits``); "lax" uses the logit-store codec.  Both
+    produce the LogitStore wire format (max logit shifted to 0, bf16).
+    """
+    if impl == "kernel":
+        def emit(logits):
+            vals, idx = topk_logits(logits, k, interpret=interpret)
+            vals = vals - vals[..., :1]
+            return vals.astype(jnp.bfloat16), idx
+        return emit
+    if impl != "lax":
+        raise ValueError(f"unknown topk impl {impl!r}")
+    return lambda logits: ls.topk_compress(logits, k)
+
+
+class StreamingEngine:
+    """Batched inference over an acoustic model with top-k emission.
+
+    Batch path: ``submit()`` feature utterances, ``run()`` drains the
+    queue through the policy's batcher.  Streaming path: ``open_stream``/
+    ``feed``/``close_stream`` carry per-stream recurrent state across
+    chunks (causal models only).
+    """
+
+    def __init__(self, cfg, params, *, k: int = 20, temperature: float = 1.0,
+                 policy: BatchPolicy = THROUGHPUT, n_slots: int = 4,
+                 topk_impl: str = "lax", interpret: bool = True):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.k = k
+        self.temperature = temperature
+        self.policy = policy
+        self.queue = RequestQueue()
+        self._emit = make_topk_emitter(k, topk_impl, interpret=interpret)
+        self._fwd = jax.jit(self._batch_forward)
+        self._fwd_dict = jax.jit(self._dict_forward)
+        # ---- streaming slots
+        self.n_slots = n_slots
+        self._stream_state = None
+        self._slot_free = list(range(n_slots))
+        self._stream_fwd = jax.jit(self._stream_forward)
+
+    # ------------------------------------------------------------ forwards
+
+    def _batch_forward(self, params, feats, lens):
+        h, _ = self.model.apply(params, feats, lens=lens)
+        return self._emit(self.model.unembed(params, h) / self.temperature)
+
+    def _dict_forward(self, params, batch):
+        """Family-generic forward for pre-formed dict batches (the
+        teacher's legacy surface: works for AM, LM and enc-dec alike).
+        The AM branch adds lens-aware padding; the rest delegates to the
+        train path's dispatch."""
+        if self.cfg.family == "lstm_am":
+            lens = batch.get("lens")
+            if lens is None and "mask" in batch:
+                # chunked pipeline batches carry a frame mask, not lens —
+                # without this the biLSTM backward pass would read the
+                # zero padding of partial chunks
+                lens = batch["mask"].sum(axis=-1).astype(jnp.int32)
+            h, _ = self.model.apply(params, batch["feats"], lens=lens)
+        else:
+            h, _ = steps.model_forward(self.model, self.cfg, params, batch)
+        return self._emit(self.model.unembed(params, h) / self.temperature)
+
+    def _stream_forward(self, params, state, feats, lens):
+        h, new_state = self.model.stream_step(params, state, feats,
+                                              lens=lens)
+        vals, idx = self._emit(self.model.unembed(params, h)
+                               / self.temperature)
+        return vals, idx, new_state
+
+    # ---------------------------------------------------------- batch path
+
+    def forward_topk(self, batch: dict):
+        """One pre-formed batch -> (vals, idx).  No queue, no padding
+        bookkeeping — the thinnest engine surface."""
+        return self._fwd_dict(self.params, batch)
+
+    def submit(self, feats: np.ndarray, meta: Optional[dict] = None) -> int:
+        """Enqueue one (T, F) utterance; returns its request id.
+
+        Shape is validated here, at the API boundary: a malformed
+        request failing later inside run() would strand the valid
+        requests batched alongside it.
+        """
+        if self.cfg.family != "lstm_am":
+            raise ValueError(
+                "the queued feature path is the acoustic-model surface; "
+                "use forward_topk (dict batches) or TokenServer")
+        feats = np.asarray(feats)
+        if feats.ndim != 2 or feats.shape[1] != self.cfg.feat_dim:
+            raise ValueError(
+                f"expected (T, {self.cfg.feat_dim}) features, got "
+                f"{feats.shape}")
+        return self.queue.submit(feats, meta)
+
+    def run(self, on_batch=None) -> Dict[int, CompletedRequest]:
+        """Drain the queue: bucket, batch, forward, unpad, complete.
+
+        Returns the results completed by *this* call, keyed by rid, and
+        evicts them from the queue's ledger — the engine's memory must
+        not grow with uptime, so results live with the caller.  One XLA
+        program per distinct bucket length.  ``on_batch`` (FormedBatch ->
+        None), if given, fires after each batch completes — load
+        generators use it for per-request latency accounting.
+        """
+        reqs = self.queue.pop_pending()
+        try:
+            for fb in form_batches(reqs, self.policy):
+                vals, idx = self._fwd(self.params, jnp.asarray(fb.feats),
+                                      jnp.asarray(fb.lens))
+                vals = np.asarray(jax.device_get(vals).astype(jnp.float32))
+                idx = np.asarray(jax.device_get(idx))
+                for i, r in enumerate(fb.requests):
+                    # copy: a slice view would pin the whole padded batch
+                    # array in the results ledger for its lifetime
+                    self.queue.complete(r.rid, vals[i, :r.length].copy(),
+                                        idx[i, :r.length].copy())
+                if on_batch is not None:
+                    on_batch(fb)
+        except BaseException:
+            # a failed forward must not strand its sibling requests:
+            # everything unfulfilled goes back to pending for retry
+            self.queue.restore_in_flight()
+            raise
+        return self.queue.pop_completed()
+
+    # ------------------------------------------------------ streaming path
+
+    def _ensure_stream_state(self):
+        if self._stream_state is None:
+            self._stream_state = self.model.init_stream_state(self.n_slots)
+
+    def open_stream(self) -> int:
+        """Claim a slot with fresh recurrent state; returns stream id."""
+        if not supports_streaming(self.cfg):
+            raise ValueError("model has no streaming form (bidirectional)")
+        if not self._slot_free:
+            raise RuntimeError("all stream slots busy")
+        self._ensure_stream_state()
+        sid = self._slot_free.pop(0)
+        self._stream_state = jax.tree_util.tree_map(
+            lambda a: a.at[sid].set(0), self._stream_state)
+        return sid
+
+    def close_stream(self, sid: int):
+        if not 0 <= sid < self.n_slots or sid in self._slot_free:
+            raise ValueError(f"stream {sid} is not open")
+        self._slot_free.append(sid)
+        self._slot_free.sort()
+
+    def feed(self, chunks: Dict[int, np.ndarray]):
+        """One batched streaming step over all active streams.
+
+        chunks: {sid: (t, F)} — chunk lengths may differ per stream
+        (each stream's state freezes at its own valid length).  Returns
+        {sid: (vals (t, k), idx (t, k))}.
+        """
+        if not chunks:
+            return {}
+        chunks = {sid: np.asarray(c) for sid, c in chunks.items()}
+        for sid, c in chunks.items():
+            if not 0 <= sid < self.n_slots or sid in self._slot_free:
+                raise ValueError(f"stream {sid} is not open")
+            if c.ndim != 2 or c.shape[1] != self.cfg.feat_dim:
+                raise ValueError(
+                    f"stream {sid}: expected (t, {self.cfg.feat_dim}) "
+                    f"chunk, got {c.shape}")
+        self._ensure_stream_state()
+        t_max = bucket_length(max(c.shape[0] for c in chunks.values()),
+                              self.policy.bucket_multiple)
+        feats = np.zeros((self.n_slots, t_max, self.cfg.feat_dim),
+                         np.float32)
+        lens = np.zeros((self.n_slots,), np.int32)
+        for sid, c in chunks.items():
+            feats[sid, :c.shape[0]] = c
+            lens[sid] = c.shape[0]
+        vals, idx, self._stream_state = self._stream_fwd(
+            self.params, self._stream_state, jnp.asarray(feats),
+            jnp.asarray(lens))
+        vals = np.asarray(jax.device_get(vals).astype(jnp.float32))
+        idx = np.asarray(jax.device_get(idx))
+        # copies, not views: accumulating consumers must not pin the
+        # whole padded slot batch per chunk (same invariant as run())
+        return {sid: (vals[sid, :c.shape[0]].copy(),
+                      idx[sid, :c.shape[0]].copy())
+                for sid, c in chunks.items()}

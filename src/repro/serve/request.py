@@ -1,0 +1,123 @@
+"""Request/response plumbing for the batched inference engine.
+
+One request = one utterance (a (T, F) feature matrix for the acoustic
+model; a token prompt for an LM).  The queue is deliberately simple and
+single-threaded: the engine drains it in arrival order, the batcher
+regroups for padding efficiency, and completion order is therefore *not*
+arrival order — results are keyed by request id and the queue tracks
+completeness so callers can assert nothing was dropped.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class InferenceRequest:
+    """A single utterance awaiting inference.
+
+    feats: (T, F) float features.  ``meta`` rides along untouched (e.g.
+    the corpus utterance id for LogitStore bookkeeping).
+    """
+    rid: int
+    feats: np.ndarray
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def length(self) -> int:
+        return int(self.feats.shape[0])
+
+
+@dataclass
+class CompletedRequest:
+    """Result record: top-k logits for every valid frame."""
+    rid: int
+    vals: np.ndarray            # (T, k) — shifted logit values
+    idx: np.ndarray             # (T, k) int32 — vocab indices
+    meta: dict = field(default_factory=dict)
+
+
+class RequestQueue:
+    """FIFO of pending requests + completion ledger.
+
+    submit() assigns monotonically increasing rids; the engine pops
+    pending work, fulfils it in any order, and ``complete()`` records
+    results.  ``drained`` is True only when every submitted rid has a
+    result — the completeness invariant the tests pin down.
+    """
+
+    # diagnostic ring: recent completion order only — bounded so the
+    # queue's memory stays flat over engine uptime
+    ORDER_RING = 4096
+
+    def __init__(self):
+        self._next_rid = 0
+        self._pending: deque[InferenceRequest] = deque()
+        self._in_flight: Dict[int, InferenceRequest] = {}
+        self._done: Dict[int, CompletedRequest] = {}
+        self._completion_order: deque[int] = deque(maxlen=self.ORDER_RING)
+
+    def submit(self, feats: np.ndarray, meta: Optional[dict] = None) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self._pending.append(
+            InferenceRequest(rid, np.asarray(feats), dict(meta or {})))
+        return rid
+
+    def pop_pending(self, max_n: Optional[int] = None
+                    ) -> List[InferenceRequest]:
+        """Move up to max_n requests (all, if None) into the in-flight set."""
+        out = []
+        while self._pending and (max_n is None or len(out) < max_n):
+            req = self._pending.popleft()
+            self._in_flight[req.rid] = req
+            out.append(req)
+        return out
+
+    def complete(self, rid: int, vals: np.ndarray, idx: np.ndarray):
+        req = self._in_flight.pop(rid)
+        self._done[rid] = CompletedRequest(rid, vals, idx, req.meta)
+        self._completion_order.append(rid)
+
+    def pop_completed(self) -> Dict[int, CompletedRequest]:
+        """Hand over (and evict) every completed result.  The ledger must
+        not grow with engine uptime — results live with the caller, not
+        the queue (the firehose writes them straight to the LogitStore)."""
+        done, self._done = self._done, {}
+        return done
+
+    def discard_pending(self) -> int:
+        """Drop every pending request (recovery hygiene: a consumer
+        starting a fresh self-contained drain must not inherit another
+        call's queued work).  Returns the number discarded."""
+        n = len(self._pending)
+        self._pending.clear()
+        return n
+
+    def restore_in_flight(self):
+        """Put popped-but-unfulfilled requests back at the head of the
+        queue (rid order) — the engine's failure-recovery hook, so a
+        forward error mid-drain never strands its sibling requests."""
+        stranded = sorted(self._in_flight.values(), key=lambda r: r.rid)
+        self._in_flight.clear()
+        self._pending.extendleft(reversed(stranded))
+
+    @property
+    def n_submitted(self) -> int:
+        return self._next_rid
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._pending)
+
+    @property
+    def drained(self) -> bool:
+        return not self._pending and not self._in_flight
+
+    @property
+    def completion_order(self) -> List[int]:
+        return list(self._completion_order)

@@ -1,0 +1,94 @@
+"""Deterministic stand-in for the tiny hypothesis API subset the suite uses.
+
+When the ``[test]`` extra (which declares ``hypothesis``) is installed, the
+test modules import the real library and this file is inert.  When it is
+not — e.g. a bare container with only jax/numpy/pytest — the modules fall
+back to this shim so the property tests still *run* (with seeded,
+deterministic draws) instead of erroring at collection or skipping
+wholesale.
+
+Supported surface: ``given(**kwargs)`` with keyword strategies,
+``settings(max_examples=..., deadline=...)``, ``st.integers(lo, hi)``,
+``st.sampled_from(seq)``.  Anything else raises immediately so a new
+hypothesis feature can't silently no-op here.
+
+The shim caps examples at FALLBACK_MAX_EXAMPLES: it is a smoke-level
+stand-in; full-rigor randomized search comes from real hypothesis in CI.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+FALLBACK_MAX_EXAMPLES = 5
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+class _Namespace:
+    integers = staticmethod(_integers)
+    sampled_from = staticmethod(_sampled_from)
+
+
+st = _Namespace()
+
+
+def settings(max_examples: int = 20, deadline=None, **unknown):
+    if unknown:
+        raise NotImplementedError(
+            f"fallback settings() does not support {sorted(unknown)}")
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*args, **strategies):
+    if args or not strategies:
+        raise NotImplementedError(
+            "fallback given() supports keyword strategies only")
+    for name, strat in strategies.items():
+        if not isinstance(strat, _Strategy):
+            raise NotImplementedError(
+                f"fallback strategy for {name!r} not supported")
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def run(*fargs, **fkwargs):
+            # read at call time so @settings works above or below @given
+            # (above: the attribute lands on this wrapper, not fn)
+            n = min(getattr(run, "_fallback_max_examples",
+                            getattr(fn, "_fallback_max_examples", 20)),
+                    FALLBACK_MAX_EXAMPLES)
+            # stable per-test seed: independent of hash randomization
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for _ in range(n):
+                draws = {k: s.draw(rng) for k, s in strategies.items()}
+                fn(*fargs, **draws, **fkwargs)
+
+        # hide the drawn params from pytest's fixture resolution: the
+        # wrapper itself takes no arguments
+        run.__signature__ = inspect.Signature()
+        del run.__wrapped__
+        return run
+    return deco

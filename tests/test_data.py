@@ -1,7 +1,10 @@
 """Data pipeline: determinism, featurizer faithfulness, chunking, hashing."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # [test] extra absent: deterministic shim
+    from _hypothesis_fallback import given, settings, st
 
 from repro.data import (CorpusLoader, FeatureConfig, SynthConfig,
                         chunk_utterances, featurize_utterance, pad_batch,
@@ -107,6 +110,7 @@ def test_speaker_hash_stable_and_spread():
     assert counts.min() > 10        # roughly uniform
 
 
+@pytest.mark.slow
 def test_loader_partition_disjoint():
     """Workers see disjoint speaker sets; union covers all utterances'
     speakers."""

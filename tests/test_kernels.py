@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # [test] extra absent: deterministic shim
+    from _hypothesis_fallback import given, settings, st
 
 from repro.kernels import (gtc_compress, gtc_compress_ref,
                            sparse_ce_lse_gather, sparse_ce_lse_gather_ref,
@@ -17,11 +20,12 @@ from repro.kernels import (gtc_compress, gtc_compress_ref,
 @pytest.mark.parametrize("shape,k", [
     ((4, 3183), 20),           # the paper's senones, k=20
     ((2, 3, 500), 5),
-    ((1, 262144), 20),         # gemma3 vocab
+    pytest.param((1, 262144), 20, marks=pytest.mark.slow),  # gemma3 vocab
     ((130, 777), 11),          # unaligned rows + vocab
     ((8, 128), 128),           # k == v_tile edge
 ])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [
+    jnp.float32, pytest.param(jnp.bfloat16, marks=pytest.mark.slow)])
 def test_topk_sweep(shape, k, dtype):
     rng = np.random.default_rng(hash((shape, k)) % 2**31)
     x = jnp.asarray(rng.normal(size=shape), dtype)
@@ -31,6 +35,7 @@ def test_topk_sweep(shape, k, dtype):
     np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
 
 
+@pytest.mark.slow
 @given(v=st.integers(100, 5000), k=st.integers(1, 20),
        seed=st.integers(0, 50))
 @settings(max_examples=10, deadline=None)
@@ -48,8 +53,8 @@ def test_topk_property(v, k, seed):
 
 @pytest.mark.parametrize("t,d,v,k,cap", [
     (37, 64, 3183, 20, 0.0),
-    (130, 96, 500, 5, 30.0),
-    (16, 128, 8192, 20, 0.0),
+    pytest.param(130, 96, 500, 5, 30.0, marks=pytest.mark.slow),
+    pytest.param(16, 128, 8192, 20, 0.0, marks=pytest.mark.slow),
     (5, 32, 150, 3, 0.0),
 ])
 def test_sparse_ce_sweep(t, d, v, k, cap):
@@ -82,11 +87,14 @@ def test_sparse_ce_bf16_inputs():
 # ---------------------------------------------------------- swa_attention
 
 @pytest.mark.parametrize("b,hq,hkv,s,hd,w", [
-    (2, 4, 2, 256, 64, 128),
-    (1, 2, 1, 300, 80, 100),       # unaligned everything
-    (1, 1, 1, 512, 128, 512),      # window == seq
+    pytest.param(2, 4, 2, 256, 64, 128, marks=pytest.mark.slow),
+    pytest.param(1, 2, 1, 300, 80, 100,     # unaligned everything
+                 marks=pytest.mark.slow),
+    pytest.param(1, 1, 1, 512, 128, 512,    # window == seq
+                 marks=pytest.mark.slow),
     (2, 2, 2, 64, 32, 16),         # tiny
-    (1, 2, 1, 1024, 128, 384),     # non-tile-multiple window
+    pytest.param(1, 2, 1, 1024, 128, 384,   # non-tile-multiple window
+                 marks=pytest.mark.slow),
 ])
 def test_swa_sweep(b, hq, hkv, s, hd, w):
     rng = np.random.default_rng(s + w)

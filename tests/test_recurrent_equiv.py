@@ -3,6 +3,7 @@ residuals) — the §Perf memory lever for xlstm train_4k."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.models import recurrent as R
 
@@ -22,6 +23,7 @@ def test_mlstm_chunked_equals_flat():
                                atol=1e-5)
 
 
+@pytest.mark.slow
 def test_mlstm_chunked_gradients_match():
     rng = np.random.default_rng(1)
     b, h, s, hd = 1, 2, 64, 8

@@ -12,8 +12,8 @@ from repro.distributed import sharding as sh
 from repro.models.api import abstract_params
 from repro.utils.trees import map_with_path, tree_paths
 
-POD = AbstractMesh((16, 16), ("data", "model"))
-MULTI = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+POD = AbstractMesh((("data", 16), ("model", 16)))
+MULTI = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
 
 
 def _check_specs(cfg, mesh):
@@ -42,7 +42,7 @@ def test_param_specs_divisible(arch, mesh):
 def test_param_specs_degrade_on_tiny_mesh(arch):
     """Reduced configs on a 1-device mesh: everything degrades to
     replicated (or still-divisible) specs, never an error."""
-    tiny = AbstractMesh((1, 1), ("data", "model"))
+    tiny = AbstractMesh((("data", 1), ("model", 1)))
     _check_specs(reduced(get_arch(arch)), tiny)
 
 
