@@ -8,17 +8,31 @@ filtering with Nesterov block momentum (the 64-GPU trainer), printing the
 loss curves and the GTC wire density — the trade the paper's §5.2
 quantifies as "in attempting to scale to 64 GPUs, we lose some of the
 gains".
+
+Both runs are the *same* Trainer.fit() loop over the same data source;
+only the DistributedStrategy constructor argument differs — the point
+of the unified Trainer API.
 """
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core.ssl_pipeline import PipelineConfig, SSLPipeline
-from repro.distributed import bmuf as bmuf_lib
-from repro.distributed import gtc as gtc_lib
-from repro.launch.steps import init_opt_state, make_loss_fn, make_train_step
+from repro.distributed.bmuf import BMUFConfig
+from repro.distributed.gtc import GTCConfig
+from repro.launch.steps import make_loss_fn
 from repro.models import build_model
-from repro.optim import momentum_update
+from repro.train import (GTC, BMUFVmap, ListSink, Trainer, epoch_source)
+
+
+def run(strategy, label, *, model, cfg, batches, epochs=3, lr=5e-2):
+    sink = ListSink()
+    trainer = Trainer(strategy, {"ce": make_loss_fn(model, cfg, "ce")},
+                      metrics=sink)
+    state = trainer.init_state(model.init(jax.random.key(0)))
+    state = trainer.fit(state, epoch_source(lambda ep: batches, epochs,
+                                            lr, "ce"))
+    print(f"  {label}: {int(state.step)} updates, "
+          f"loss {sink.first('loss'):.3f} -> {sink.last('loss'):.3f}")
+    return state, sink
 
 
 def main():
@@ -29,55 +43,17 @@ def main():
     batches = pipe._batches(pipe.rng_labeled, chunked=True, seed=0)
     print(f"{len(batches)} chunked batches of {pc.batch}x{pc.chunk_len}")
 
-    # ---- GTC: compressed synchronous SGD ----
     print("\n== GTC (threshold compression, error feedback) ==")
-    params = model.init(jax.random.key(0))
-    loss_fn = make_loss_fn(model, cfg, "ce")
-    gc = gtc_lib.GTCConfig(tau=5e-4, n_workers=1)
-    gtc_state = gtc_lib.gtc_init(params)
-    opt = init_opt_state(params)
+    _, sink = run(GTC(GTCConfig(tau=5e-4, n_workers=1)), "gtc",
+                  model=model, cfg=cfg, batches=batches)
+    dens = sink.last("gtc_density")
+    print(f"  wire density {dens:.3f} "
+          f"(bandwidth saving ~{1 / max(dens, 1e-3):.0f}x)")
 
-    def gtc_step(params, opt, gtc_state, batch):
-        (_, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
-        send, res = gtc_lib.compress_tree(g, gtc_state["residual"], gc.tau)
-        params, opt = momentum_update(params, send, opt, lr=5e-2)
-        m["density"] = gtc_lib.density(send, gc.tau)
-        return params, opt, {"residual": res}, m
-
-    step = jax.jit(gtc_step)
-    for ep in range(3):
-        for b in batches:
-            bj = {k: jnp.asarray(v) for k, v in b.items()}
-            params, opt, gtc_state, m = step(params, opt, gtc_state, bj)
-        print(f"  epoch {ep}: loss {float(m['loss']):.3f} "
-              f"wire density {float(m['density']):.3f} "
-              f"(bandwidth saving ~{1/max(float(m['density']),1e-3):.0f}x)")
-
-    # ---- BMUF: local steps + block sync ----
-    print("\n== BMUF (4 workers, block sync every 2 steps) ==")
-    bc = bmuf_lib.BMUFConfig(n_workers=4, block_steps=2)
-    train_step = make_train_step(model, cfg, loss_kind="ce", lr=5e-2)
-    block = jax.jit(bmuf_lib.make_bmuf_block_step(train_step, bc))
-    params_b = model.init(jax.random.key(0))
-    state = bmuf_lib.bmuf_init(params_b, bc)
-    opt1 = init_opt_state(params_b)
-    opts = jax.tree_util.tree_map(
-        lambda x: jnp.broadcast_to(x, (4,) + x.shape).copy(), opt1)
-    need = bc.block_steps * bc.n_workers
-    group = []
-    losses = []
-    for ep in range(3):
-        for b in batches:
-            group.append({k: jnp.asarray(v) for k, v in b.items()})
-            if len(group) == need:
-                stacked = jax.tree_util.tree_map(
-                    lambda *xs: jnp.stack(xs).reshape(
-                        bc.block_steps, bc.n_workers, *xs[0].shape), *group)
-                state, opts, ms = block(state, opts, stacked)
-                losses.append(float(jnp.mean(ms["loss"])))
-                group = []
-        print(f"  epoch {ep}: mean block loss {losses[-1]:.3f} "
-              f"(communication 1/{bc.block_steps} of sync SGD)")
+    bc = BMUFConfig(n_workers=4, block_steps=2)
+    print(f"\n== BMUF ({bc.n_workers} workers, block sync every "
+          f"{bc.block_steps} steps) ==")
+    run(BMUFVmap(bc), "bmuf", model=model, cfg=cfg, batches=batches)
 
     print("\nGTC communicates every step (compressed); BMUF every "
           f"{bc.block_steps} steps (full model mean + block momentum).")

@@ -8,14 +8,7 @@
    unlabeled split into a LogitStore (no decoder, no confidence model).
 4. Train the student with the distillation loss on unlabeled data.
 """
-import jax
-import jax.numpy as jnp
-
-from repro.core.logit_store import LogitStore
-from repro.core.teacher import TeacherRunner
 from repro.core.ssl_pipeline import PipelineConfig, SSLPipeline
-from repro.launch.steps import init_opt_state, make_train_step
-from repro.models import build_model
 
 
 def main():

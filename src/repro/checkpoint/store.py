@@ -89,6 +89,22 @@ class CheckpointStore:
             raise FileNotFoundError(f"no checkpoints under {self.root}")
         return load_tree(self.path(step), like), step
 
+    def load_meta(self, step: int) -> Optional[dict]:
+        meta = self.path(step) + ".meta.json"
+        if not os.path.exists(meta):
+            return None
+        with open(meta) as f:
+            return json.load(f)
+
+    def clear(self):
+        """Drop every checkpoint (a completed stage retires its resume
+        state so a fresh invocation trains anew)."""
+        for s in self.steps():
+            os.remove(self.path(s))
+            meta = self.path(s) + ".meta.json"
+            if os.path.exists(meta):
+                os.remove(meta)
+
     def _gc(self):
         steps = self.steps()
         for s in steps[: -self.keep]:

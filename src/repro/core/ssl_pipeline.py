@@ -7,22 +7,31 @@ Stages (paper sections in brackets):
              logits into the LogitStore [§3.2.2]
   student  : scheduled learning over unlabeled sub-epochs with labeled
              interleaves [§3.3], GTC or BMUF trainer [§3.5]
-  smbr     : sequence training on labeled data only [§3.4]
+  smbr     : sequence training on labeled data only [§3.4], under
+             threshold-compressed SGD
 
-Every stage checkpoints into <out>/ckpt_<stage>; metrics include the
-frame-error-rate (FER) on a held-out synthetic VAL set and the relative
-FER reduction vs the baseline — the container-scale proxy for the paper's
-relative WERR (the paper only ever reports relative numbers).
+Every training stage is one ``Trainer.fit()`` call (repro.train): the
+stage picks a DistributedStrategy (Local / BMUFVmap / GTC), a dict of
+loss fns, and a DataSource; the Trainer owns the jit (one executable
+per loss kind x batch shape, lr traced), periodic TrainState
+checkpoints under <out>/ckpt_<stage>/state (killed stages resume
+mid-stream; completed stages retire their resume state), and the
+metrics sink.  Final params land in <out>/ckpt_<stage> — the
+cross-stage interface.
+
+Metrics include the frame-error-rate (FER) on a held-out synthetic VAL
+set and the relative FER reduction vs the baseline — the
+container-scale proxy for the paper's relative WERR (the paper only
+ever reports relative numbers).
 """
 from __future__ import annotations
 
 import os
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import CheckpointStore
 from repro.configs.lstm_am_7khr import CONFIG as AM_CONFIG
@@ -32,14 +41,15 @@ from repro.core.logit_store import LogitStore
 from repro.core.teacher import TeacherRunner
 from repro.data import FeatureConfig, SynthConfig
 from repro.data.loader import CorpusLoader
-from repro.distributed import bmuf as bmuf_lib
-from repro.distributed import gtc as gtc_lib
-from repro.launch.steps import (init_opt_state, make_loss_fn,
-                                make_train_step)
+from repro.distributed.bmuf import BMUFConfig
+from repro.distributed.gtc import GTCConfig
+from repro.launch.steps import make_loss_fn
 from repro.models import build_model
-from repro.optim import momentum_update
 from repro.seqtrain import build_denominator_graph, make_smbr_loss_fn
 from repro.seqtrain.smbr import frame_error_rate
+from repro.train import (GTC, BMUFVmap, ListSink, Local, TrainBatch,
+                         Trainer, chain, distill_shard_source,
+                         epoch_source, scheduled_source)
 
 
 @dataclass
@@ -61,6 +71,7 @@ class PipelineConfig:
     epochs_baseline: int = 5
     lr: float = 5e-2
     topk: int = 10
+    ckpt_every: int = 20              # TrainState resume-ckpt cadence
     # schedule (paper-structured, scaled)
     n_sub_epochs: int = 4
     labeled_every: int = 2
@@ -152,21 +163,15 @@ class SSLPipeline:
         logits = model.unembed(params, h)
         return float(frame_error_rate(logits, vb["labels"], vb["mask"]))
 
-    def _train_ce(self, cfg, params, batches_per_epoch, n_epochs, lr,
-                  label=""):
-        model = build_model(cfg)
-        step = jax.jit(make_train_step(model, cfg, loss_kind="ce", lr=lr))
-        opt = init_opt_state(params)
-        losses = []
-        for ep in range(n_epochs):
-            for b in batches_per_epoch(ep):
-                bj = {k: jnp.asarray(v) for k, v in b.items()}
-                params, opt, m = step(params, opt, bj)
-                losses.append(float(m["loss"]))
-        return params, losses
-
     def _ckpt(self, stage) -> CheckpointStore:
         return CheckpointStore(os.path.join(self.out, f"ckpt_{stage}"))
+
+    def _trainer(self, stage, strategy, loss_fns, sink) -> Trainer:
+        """One Trainer per stage: resume state under ckpt_<stage>/state."""
+        store = CheckpointStore(
+            os.path.join(self.out, f"ckpt_{stage}", "state"))
+        return Trainer(strategy, loss_fns, checkpoint=store,
+                       ckpt_every=self.pc.ckpt_every, metrics=sink)
 
     def _load_or_none(self, stage, cfg):
         store = self._ckpt(stage)
@@ -180,60 +185,72 @@ class SSLPipeline:
         except FileNotFoundError:
             return None
 
+    def _ce_source(self, *, n_epochs, lr, seed0=0):
+        """The supervised recipe: chunked-BPTT epochs with rotating
+        feature offsets, then one full-sequence fine-tune epoch."""
+        return chain(
+            epoch_source(
+                lambda ep: self._batches(self.rng_labeled, chunked=True,
+                                         offset=ep % 3, seed=seed0 + ep),
+                n_epochs, lr, "ce"),
+            epoch_source(
+                lambda ep: self._batches(self.rng_labeled, chunked=False),
+                1, lr * 0.3, "ce"))
+
     # -------------------------------------------------------------- stages
 
     def stage_baseline(self) -> Dict:
         pc = self.pc
         model = build_model(self.student_cfg)
-        params = model.init(jax.random.key(pc.seed))
-        params, losses = self._train_ce(
-            self.student_cfg, params,
-            lambda ep: self._batches(self.rng_labeled, chunked=True,
-                                     offset=ep % 3, seed=ep),
-            pc.epochs_baseline, pc.lr)
-        # full-sequence fine-tune (paper: 2 epochs full-seq CE)
-        params, losses2 = self._train_ce(
-            self.student_cfg, params,
-            lambda ep: self._batches(self.rng_labeled, chunked=False),
-            1, pc.lr * 0.3)
-        self._ckpt("baseline").save(0, params)
-        fer = self.fer(self.student_cfg, params)
-        return {"loss_first": losses[0], "loss_last": losses2[-1],
-                "val_fer": fer}
+        sink = ListSink()
+        tr = self._trainer("baseline", Local(),
+                           {"ce": make_loss_fn(model, self.student_cfg,
+                                               "ce")}, sink)
+        state = tr.init_state(model.init(jax.random.key(pc.seed)),
+                              seed=pc.seed)
+        state = tr.fit(state, self._ce_source(n_epochs=pc.epochs_baseline,
+                                              lr=pc.lr))
+        tr.finalize(state)
+        self._ckpt("baseline").save(0, state.params)
+        # sink only saw post-resume updates: first/last may be None on a
+        # run resumed at (or past) its final periodic checkpoint
+        return {"loss_first": sink.first("loss"),
+                "loss_last": sink.last("loss"),
+                "val_fer": self.fer(self.student_cfg, state.params)}
 
     def stage_teacher(self) -> Dict:
         pc = self.pc
         model = build_model(self.teacher_cfg)
-        params = model.init(jax.random.key(pc.seed + 1))
-        params, losses = self._train_ce(
-            self.teacher_cfg, params,
-            lambda ep: self._batches(self.rng_labeled, chunked=True,
-                                     offset=ep % 3, seed=100 + ep),
-            pc.epochs_baseline, pc.lr)
-        params, losses2 = self._train_ce(
-            self.teacher_cfg, params,
+        sink = ListSink()
+        tr = self._trainer("teacher", Local(),
+                           {"ce": make_loss_fn(model, self.teacher_cfg,
+                                               "ce")}, sink)
+        state = tr.init_state(model.init(jax.random.key(pc.seed + 1)),
+                              seed=pc.seed + 1)
+        state = tr.fit(state, self._ce_source(n_epochs=pc.epochs_baseline,
+                                              lr=pc.lr, seed0=100))
+
+        # sMBR fine-tune of the teacher (paper's "with sMBR teacher" arm);
+        # no grad clip — sMBR grads are already bounded by the posteriors
+        smbr_sink = ListSink()
+        smbr_tr = self._trainer(
+            "teacher_smbr", Local(clip=0.0),
+            {"smbr": make_smbr_loss_fn(model, self.teacher_cfg,
+                                       self._graph(),
+                                       kappa=pc.smbr_kappa)}, smbr_sink)
+        sstate = smbr_tr.init_state(state.params, seed=pc.seed + 1)
+        sstate = smbr_tr.fit(sstate, epoch_source(
             lambda ep: self._batches(self.rng_labeled, chunked=False),
-            1, pc.lr * 0.3)
-        # sMBR fine-tune of the teacher (paper's "with sMBR teacher" arm)
-        graph = self._graph()
-        smbr_loss = make_smbr_loss_fn(model, self.teacher_cfg, graph,
-                                      kappa=pc.smbr_kappa)
-
-        def smbr_step(params, opt, batch):
-            (_, m), g = jax.value_and_grad(smbr_loss, has_aux=True)(
-                params, batch)
-            params, opt = momentum_update(params, g, opt, lr=pc.smbr_lr)
-            return params, opt, m
-
-        step = jax.jit(smbr_step)
-        opt = init_opt_state(params)
-        for b in self._batches(self.rng_labeled, chunked=False):
-            bj = {k: jnp.asarray(v) for k, v in b.items()}
-            params, opt, m = step(params, opt, bj)
-        self._ckpt("teacher").save(0, params)
-        return {"loss_last": losses2[-1],
-                "val_fer": self.fer(self.teacher_cfg, params),
-                "smbr_eacc": float(m["expected_frame_acc"])}
+            1, pc.smbr_lr, "smbr"))
+        # retire resume state only once the whole stage is done — a kill
+        # during the sMBR sub-fit must still resume (not retrain) the CE
+        # part on re-invocation
+        tr.finalize(state)
+        smbr_tr.finalize(sstate)
+        self._ckpt("teacher").save(0, sstate.params)
+        return {"loss_last": sink.last("loss"),
+                "val_fer": self.fer(self.teacher_cfg, sstate.params),
+                "smbr_eacc": smbr_sink.last("expected_frame_acc")}
 
     def _graph(self):
         pairs = self.loader.featurized(*self.rng_labeled)
@@ -257,101 +274,54 @@ class SSLPipeline:
         return {"n_shards": len(paths), "n_frames": meta.n_frames,
                 "storage_compression_x": round(full / packed, 1)}
 
+    def _student_strategy(self):
+        pc = self.pc
+        if self.student_trainer == "bmuf":
+            return BMUFVmap(BMUFConfig(n_workers=pc.bmuf_workers,
+                                       block_steps=pc.bmuf_block_steps))
+        return GTC(GTCConfig(tau=pc.gtc_tau, n_workers=1))
+
     def stage_student(self) -> Dict:
-        """Scheduled learning on unlabeled top-k targets + labeled passes."""
+        """Scheduled learning on unlabeled top-k targets + labeled
+        passes — same loop for both trainers; only the strategy differs."""
         pc = self.pc
         baseline = self._load_or_none("baseline", self.student_cfg)
         assert baseline is not None, "run stage baseline first"
         store = LogitStore(os.path.join(self.out, "logit_store"),
                            k=pc.topk, vocab=pc.n_senones)
         unl_batches = self._batches(self.rng_unlabeled, chunked=True, seed=7)
-        shards = store.shards()
-        assert len(shards) == len(unl_batches), "regenerate targets"
-
+        assert len(store.shards()) == len(unl_batches), "regenerate targets"
+        per_sub = max(1, len(unl_batches) // pc.n_sub_epochs)
         sched = scheduled.ScheduleConfig(
             n_sub_epochs=pc.n_sub_epochs, sub_epoch_hours=1.0,
             labeled_every=pc.labeled_every, chunked_until=pc.chunked_until,
             lr0=pc.lr, labeled_lr_boost=1.5)
+
         model = build_model(self.student_cfg)
-        params = baseline
-        per_sub = max(1, len(unl_batches) // pc.n_sub_epochs)
+        sink = ListSink()
+        tr = self._trainer(
+            f"student_{self.student_trainer}", self._student_strategy(),
+            {"distill_topk": make_loss_fn(model, self.student_cfg,
+                                          "distill_topk"),
+             "ce": make_loss_fn(model, self.student_cfg, "ce")}, sink)
+        state = tr.init_state(baseline, seed=pc.seed)
 
-        if self.student_trainer == "bmuf":
-            return self._student_bmuf(params, sched, unl_batches, store,
-                                      per_sub)
-
-        step_d = jax.jit(make_train_step(model, self.student_cfg,
-                                         loss_kind="distill_topk",
-                                         lr=pc.lr), static_argnames=())
-        losses = []
-        opt = init_opt_state(params)
-        for phase in scheduled.schedule(sched):
-            if phase.kind == "unlabeled":
-                lo = (phase.sub_epoch - 1) * per_sub
-                for bi in range(lo, min(lo + per_sub, len(unl_batches))):
-                    b = unl_batches[bi]
-                    vals, idx = store.read_shard(bi)
-                    bj = {"feats": jnp.asarray(b["feats"]),
-                          "mask": jnp.asarray(b["mask"]),
-                          "topk_vals": vals, "topk_idx": idx}
-                    params, opt, m = self._lr_step(step_d, params, opt, bj,
-                                                   phase.lr)
-                    losses.append(float(m["loss"]))
-            else:
-                step_l = jax.jit(make_train_step(
-                    model, self.student_cfg, loss_kind="ce", lr=phase.lr))
-                for b in self._batches(self.rng_labeled,
-                                       chunked=phase.chunked,
-                                       offset=max(phase.feature_offset, 0)):
-                    bj = {k: jnp.asarray(v) for k, v in b.items()}
-                    params, opt, m = step_l(params, opt, bj)
-                    losses.append(float(m["loss"]))
-        self._ckpt(f"student_{self.student_trainer}").save(0, params)
-        return self._student_metrics(params, losses)
-
-    def _lr_step(self, step, params, opt, batch, lr):
-        # steps are jitted with a fixed lr; re-jitting per phase is fine at
-        # this scale — production uses the lr-as-argument variant
-        return step(params, opt, batch)
-
-    def _student_bmuf(self, params, sched, unl_batches, store, per_sub):
-        """BMUF student (paper's 64-GPU arm, W workers here)."""
-        pc = self.pc
-        model = build_model(self.student_cfg)
-        bc = bmuf_lib.BMUFConfig(n_workers=pc.bmuf_workers,
-                                 block_steps=pc.bmuf_block_steps)
-        train_step = make_train_step(model, self.student_cfg,
-                                     loss_kind="distill_topk", lr=pc.lr)
-        block = jax.jit(bmuf_lib.make_bmuf_block_step(train_step, bc))
-        state = bmuf_lib.bmuf_init(params, bc)
-        opt1 = init_opt_state(params)
-        opts = jax.tree_util.tree_map(
-            lambda x: jnp.broadcast_to(x, (bc.n_workers,) + x.shape).copy(),
-            opt1)
-        losses = []
-        need = bc.block_steps * bc.n_workers
-        for phase in scheduled.schedule(sched):
-            if phase.kind != "unlabeled":
-                continue
+        def unlabeled(phase):
             lo = (phase.sub_epoch - 1) * per_sub
-            group = []
-            for bi in range(lo, min(lo + per_sub, len(unl_batches))):
-                b = unl_batches[bi]
-                vals, idx = store.read_shard(bi)
-                group.append({"feats": jnp.asarray(b["feats"]),
-                              "mask": jnp.asarray(b["mask"]),
-                              "topk_vals": vals, "topk_idx": idx})
-                if len(group) == need:
-                    batches = jax.tree_util.tree_map(
-                        lambda *xs: jnp.stack(xs).reshape(
-                            bc.block_steps, bc.n_workers, *xs[0].shape),
-                        *group)
-                    state, opts, ms = block(state, opts, batches)
-                    losses.append(float(jnp.mean(ms["loss"])))
-                    group = []
-        params = state["theta_g"]
-        self._ckpt("student_bmuf").save(0, params)
-        return self._student_metrics(params, losses)
+            return distill_shard_source(unl_batches, store, lo,
+                                        lo + per_sub, phase.lr)
+
+        def labeled(phase):
+            return (TrainBatch(b, phase.lr, "ce")
+                    for b in self._batches(
+                        self.rng_labeled, chunked=phase.chunked,
+                        offset=max(phase.feature_offset, 0)))
+
+        state = tr.fit(state, scheduled_source(sched, unlabeled=unlabeled,
+                                               labeled=labeled))
+        tr.finalize(state)
+        self._ckpt(f"student_{self.student_trainer}").save(0, state.params)
+        return self._student_metrics(state.params, sink.values("loss"))
 
     def _student_metrics(self, params, losses):
         fer = self.fer(self.student_cfg, params)
@@ -365,40 +335,31 @@ class SSLPipeline:
                     round(100 * (base_fer - fer) / max(base_fer, 1e-9), 2)}
 
     def stage_smbr(self) -> Dict:
-        """Sequence training of the SSL student on labeled data only."""
+        """Sequence training of the SSL student on labeled data only,
+        under GTC — the paper's sMBR trainer (§3.4)."""
         pc = self.pc
         stage = f"student_{self.student_trainer}"
         params = self._load_or_none(stage, self.student_cfg)
         if params is None:
             params = self._load_or_none("baseline", self.student_cfg)
         model = build_model(self.student_cfg)
-        graph = self._graph()
-        loss_fn = make_smbr_loss_fn(model, self.student_cfg, graph,
-                                    kappa=pc.smbr_kappa)
-        gc = gtc_lib.GTCConfig(tau=pc.gtc_tau, n_workers=1)
-        gtc_state = gtc_lib.gtc_init(params)
-        opt = init_opt_state(params)
-
-        def step(params, opt, gtc_state, batch):
-            (_, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
-                params, batch)
-            send, res = gtc_lib.compress_tree(g, gtc_state["residual"],
-                                              pc.gtc_tau)
-            params, opt = momentum_update(params, send, opt, lr=pc.smbr_lr)
-            return params, opt, {"residual": res}, m
-
-        jstep = jax.jit(step)
-        eaccs = []
-        for _ in range(pc.smbr_epochs):
-            for b in self._batches(self.rng_labeled, chunked=False):
-                bj = {k: jnp.asarray(v) for k, v in b.items()}
-                params, opt, gtc_state, m = jstep(params, opt, gtc_state, bj)
-                eaccs.append(float(m["expected_frame_acc"]))
-        self._ckpt("smbr").save(0, params)
-        fer = self.fer(self.student_cfg, params)
+        sink = ListSink()
+        tr = self._trainer(
+            "smbr", GTC(GTCConfig(tau=pc.gtc_tau, n_workers=1), clip=0.0),
+            {"smbr": make_smbr_loss_fn(model, self.student_cfg,
+                                       self._graph(),
+                                       kappa=pc.smbr_kappa)}, sink)
+        state = tr.init_state(params, seed=pc.seed)
+        state = tr.fit(state, epoch_source(
+            lambda ep: self._batches(self.rng_labeled, chunked=False),
+            pc.smbr_epochs, pc.smbr_lr, "smbr"))
+        tr.finalize(state)
+        self._ckpt("smbr").save(0, state.params)
+        fer = self.fer(self.student_cfg, state.params)
         base = self._load_or_none("baseline", self.student_cfg)
         base_fer = self.fer(self.student_cfg, base)
-        return {"eacc_first": eaccs[0], "eacc_last": eaccs[-1],
+        return {"eacc_first": sink.first("expected_frame_acc"),
+                "eacc_last": sink.last("expected_frame_acc"),
                 "val_fer": fer, "baseline_fer": base_fer,
                 "rel_fer_reduction_pct":
                     round(100 * (base_fer - fer) / max(base_fer, 1e-9), 2)}

@@ -79,14 +79,15 @@ def block_sync(state, cfg: BMUFConfig, *, mean_fn=None):
 def make_bmuf_block_step(train_step: Callable, cfg: BMUFConfig):
     """One *block*: tau vmapped local steps + the sync, jittable.
 
-    train_step(params, opt_state, batch) -> (params, opt_state, metrics).
-    batches: pytree with leading dims (tau, W, ...).
+    train_step(params, opt_state, batch, lr) -> (params, opt_state,
+    metrics) with lr a traced scalar — one compile serves every
+    LR-schedule phase.  batches: pytree with leading dims (tau, W, ...).
     """
-    def block(state, opt_states, batches):
+    def block(state, opt_states, batches, lr):
         def local_tau(params, opt_state, bt):
             def one(carry, b):
                 p, o = carry
-                p, o, m = train_step(p, o, b)
+                p, o, m = train_step(p, o, b, lr)
                 return (p, o), m
             (params, opt_state), ms = jax.lax.scan(one, (params, opt_state),
                                                    bt)
@@ -120,12 +121,12 @@ def make_sharded_bmuf_block_step(train_step: Callable, cfg: BMUFConfig,
 
     ax = worker_axes if len(worker_axes) > 1 else worker_axes[0]
 
-    def block(state, opt_states, batches):
-        def shard_body(workers, opt_states, batches, theta_g, delta):
+    def block(state, opt_states, batches, lr):
+        def shard_body(workers, opt_states, batches, lr, theta_g, delta):
             def local_tau(params, opt_state, bt):
                 def one(carry, b):
                     p, o = carry
-                    p, o, m = train_step(p, o, b)
+                    p, o, m = train_step(p, o, b, lr)
                     return (p, o), m
                 (params, opt_state), ms = jax.lax.scan(
                     one, (params, opt_state), bt)
@@ -156,14 +157,15 @@ def make_sharded_bmuf_block_step(train_step: Callable, cfg: BMUFConfig,
             return workers, opt_states, metrics, new_theta, new_delta
 
         wspec = P(ax)       # leading worker dim sharded
-        rspec = P()         # theta_g / delta replicated
+        rspec = P()         # theta_g / delta / lr replicated
         fn = shard_map(
             shard_body, mesh=mesh,
-            in_specs=(wspec, wspec, P(None, ax), rspec, rspec),
+            in_specs=(wspec, wspec, P(None, ax), rspec, rspec, rspec),
             out_specs=(wspec, wspec, P(None, ax), rspec, rspec),
             check_rep=False)
         workers, opt_states, metrics, theta_g, delta = fn(
-            state["workers"], opt_states, batches, state["theta_g"],
+            state["workers"], opt_states, batches,
+            jnp.asarray(lr, jnp.float32), state["theta_g"],
             state["delta"])
         return ({"theta_g": theta_g, "delta": delta, "workers": workers},
                 opt_states, metrics)

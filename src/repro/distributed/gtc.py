@@ -94,16 +94,17 @@ def make_gtc_allreduce(cfg: GTCConfig, axis_name: str):
 
 
 def make_gtc_train_step(loss_fn: Callable, optimizer_update: Callable,
-                        cfg: GTCConfig, axis_name: str, *, lr: float = 1e-3):
+                        cfg: GTCConfig, axis_name: str):
     """Data-parallel train step with GTC gradient exchange.
 
     loss_fn(params, batch) -> (loss, metrics); runs inside shard_map with
     `axis_name` = worker axis.  optimizer_update(params, grads, opt_state,
-    lr=) -> (params, opt_state).
+    lr=) -> (params, opt_state).  lr is a traced argument of the returned
+    step — one compile serves every LR-schedule phase.
     """
     allreduce = make_gtc_allreduce(cfg, axis_name)
 
-    def step(params, opt_state, gtc_state, batch):
+    def step(params, opt_state, gtc_state, batch, lr):
         (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             params, batch)
         update, gtc_state = allreduce(grads, gtc_state)

@@ -98,10 +98,13 @@ def build_step(cfg, shape, *, loss_kind="distill_topk", vocab_chunk=8192,
             batch = input_specs(cfg, shape,
                                 topk=TOPK if kind == "distill_topk" else 0)
             bspecs = batch_specs_tree(batch, mesh, mode=shard_mode)
+            # lr: traced replicated scalar (the lr-as-argument step)
+            lr = jax.ShapeDtypeStruct(
+                (), jnp.float32, sharding=NamedSharding(mesh, P()))
             return ((_with_sharding(params, pspecs, mesh),
                      _with_sharding(opt, ospecs, mesh),
-                     _with_sharding(batch, bspecs, mesh)),
-                    (pspecs, ospecs, bspecs))
+                     _with_sharding(batch, bspecs, mesh), lr),
+                    (pspecs, ospecs, bspecs, P()))
         return fn, args
 
     if shape.kind == "prefill":
@@ -196,6 +199,8 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
         shard_mode=shard_mode)
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):           # older jax: one dict per device
+        cost = cost[0] if cost else {}
     txt = compiled.as_text()
     coll = hlo_lib.collective_stats(txt)
     n_dev = mesh.devices.size

@@ -10,14 +10,10 @@ materialized.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
 from repro.core import distill
-from repro.optim import (adam_init, adam_update, clip_by_global_norm,
-                         momentum_init, momentum_update)
 
 MTP_WEIGHT = 0.3
 
@@ -69,25 +65,22 @@ def make_loss_fn(model, cfg, loss_kind: str, *, vocab_chunk: int = 8192):
 
 
 def make_train_step(model, cfg, *, loss_kind: str = "ce",
-                    optimizer: str = "momentum", lr: float = 1e-3,
-                    clip: float = 1.0, vocab_chunk: int = 8192):
+                    optimizer: str = "momentum", clip: float = 1.0,
+                    vocab_chunk: int = 8192):
+    """-> train_step(params, opt_state, batch, lr).
+
+    lr is a *traced* argument (not baked into the closure): an LR
+    schedule sweeping any number of phases reuses one executable per
+    batch shape — tests/test_trainer.py pins the compile count.
+    """
+    from repro.train.strategies import make_sgd_step
     loss_fn = make_loss_fn(model, cfg, loss_kind, vocab_chunk=vocab_chunk)
-    upd = momentum_update if optimizer == "momentum" else adam_update
-
-    def train_step(params, opt_state, batch):
-        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            params, batch)
-        if clip:
-            grads, gn = clip_by_global_norm(grads, clip)
-            metrics["grad_norm"] = gn
-        params, opt_state = upd(params, grads, opt_state, lr=lr)
-        return params, opt_state, metrics
-
-    return train_step
+    return make_sgd_step(loss_fn, optimizer=optimizer, clip=clip)
 
 
 def init_opt_state(params, optimizer: str = "momentum"):
-    return (momentum_init if optimizer == "momentum" else adam_init)(params)
+    from repro.train.strategies import init_opt
+    return init_opt(params, optimizer)
 
 
 def make_prefill_step(model, cfg):

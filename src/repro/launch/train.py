@@ -8,6 +8,11 @@ training (BMUF or GTC) -> student sMBR on labeled data only.
   PYTHONPATH=src python -m repro.launch.train --stage all --scale tiny
   PYTHONPATH=src python -m repro.launch.train --stage student --trainer bmuf
 
+Every stage runs through repro.train.Trainer: a killed stage resumes
+from its last periodic TrainState checkpoint on the next invocation
+(pass nothing — resume is automatic; delete <out>/ckpt_<stage>/state to
+force a fresh run).
+
 For LLM archs (`--arch qwen2.5-3b --smoke`), runs a few CE steps on
 synthetic token batches with the reduced config — the multi-arch smoke
 path; the full-size path is the dry-run (launch/dryrun.py).
@@ -20,28 +25,28 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 
 def train_llm_smoke(arch: str, steps: int = 4, batch: int = 2, seq: int = 64):
     from repro.configs import get_arch, reduced
     from repro.data.loader import token_batches
-    from repro.launch.steps import init_opt_state, make_train_step
+    from repro.launch.steps import make_loss_fn
     from repro.models import build_model
+    from repro.train import ListSink, Local, Trainer, epoch_source
 
     cfg = reduced(get_arch(arch))
     model = build_model(cfg)
-    params = model.init(jax.random.key(0))
-    step = jax.jit(make_train_step(model, cfg, loss_kind="ce",
-                                   optimizer="adam", lr=3e-4))
-    opt = init_opt_state(params, "adam")
-    losses = []
-    for b in token_batches(cfg.vocab_size, batch, seq, steps):
-        batch_j = {k: jnp.asarray(v) for k, v in b.items()}
-        params, opt, m = step(params, opt, batch_j)
-        losses.append(float(m["loss"]))
-        print(f"  step loss={losses[-1]:.4f}")
+    sink = ListSink()
+    trainer = Trainer(Local(optimizer="adam"),
+                      {"ce": make_loss_fn(model, cfg, "ce")}, metrics=sink)
+    state = trainer.init_state(model.init(jax.random.key(0)))
+    state = trainer.fit(state, epoch_source(
+        lambda ep: token_batches(cfg.vocab_size, batch, seq, steps),
+        1, 3e-4, "ce"))
+    losses = sink.values("loss")
+    for l in losses:
+        print(f"  step loss={l:.4f}")
     assert np.isfinite(losses).all()
     return losses
 

@@ -21,7 +21,6 @@ exists; THROUGHPUT packs full rounds.
 """
 from __future__ import annotations
 
-from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List
 
@@ -32,6 +31,7 @@ import numpy as np
 from repro.launch.steps import make_serve_step
 from repro.models import build_model
 from repro.serve.batcher import LATENCY, BatchPolicy
+from repro.serve.request import RequestQueue
 
 
 @dataclass
@@ -44,7 +44,12 @@ class TokenRequest:
 
 
 class TokenServer:
-    """Generation-round batched decoding over the uniform decode surface."""
+    """Generation-round batched decoding over the uniform decode surface.
+
+    Request bookkeeping lives in the payload-agnostic
+    ``serve.request.RequestQueue`` (the same FIFO + completion ledger
+    the feature engine uses); this class only forms rounds and drives
+    the decode step."""
 
     def __init__(self, cfg, params, *, policy: BatchPolicy = LATENCY,
                  max_seq: int = 256, cache_dtype=jnp.bfloat16):
@@ -56,9 +61,7 @@ class TokenServer:
         self.cache_dtype = cache_dtype
         self.b = policy.max_batch
         self.serve = jax.jit(make_serve_step(self.model, cfg))
-        self._pending: deque[TokenRequest] = deque()
-        self._next_rid = 0
-        self._completed: Dict[int, TokenRequest] = {}
+        self.queue = RequestQueue()
 
     def submit(self, prompt: np.ndarray, max_new: int = 16) -> int:
         prompt = np.asarray(prompt, np.int32)
@@ -78,25 +81,26 @@ class TokenServer:
                 f"prompt ({prompt.shape[0]}) + max_new ({max_new}) needs "
                 f"{prompt.shape[0] + max_new - 1} cache entries > max_seq "
                 f"({self.max_seq})")
-        rid = self._next_rid
-        self._next_rid += 1
-        self._pending.append(TokenRequest(rid, prompt, max_new))
-        return rid
+        req = TokenRequest(-1, prompt, max_new)
+        req.rid = self.queue.submit(req)
+        return req.rid
 
     def _next_round(self) -> List[TokenRequest]:
         """Pop up to max_batch pending requests of one equal prompt
-        length (arrival order decides which length goes first)."""
-        if not self._pending:
+        length (arrival order decides which length goes first); the rest
+        go back to the queue head via its requeue hook."""
+        reqs = self.queue.pop_pending()
+        if not reqs:
             return []
-        length = self._pending[0].prompt.shape[0]
-        round_, keep = [], deque()
-        while self._pending:
-            r = self._pending.popleft()
-            if r.prompt.shape[0] == length and len(round_) < self.b:
-                round_.append(r)
+        length = reqs[0].payload.prompt.shape[0]
+        round_, keep = [], []
+        for r in reqs:
+            if (r.payload.prompt.shape[0] == length
+                    and len(round_) < self.b):
+                round_.append(r.payload)
             else:
-                keep.append(r)
-        self._pending = keep
+                keep.append(r.rid)
+        self.queue.requeue(keep)
         return round_
 
     def _run_round(self, round_: List[TokenRequest]):
@@ -125,14 +129,14 @@ class TokenServer:
             tokens = nxt
         for r in round_:
             r.done = True
-            self._completed[r.rid] = r
+            self.queue.complete(r.rid, r)
 
     def drain(self) -> Dict[int, TokenRequest]:
         """Run rounds until no pending work remains.  Returns (and
         evicts) the requests completed since the last drain — like
         StreamingEngine.run, the server's ledger must not grow with
         uptime."""
-        while self._pending:
+        while self.queue.n_pending:
             round_ = self._next_round()
             if not round_:
                 break
@@ -145,7 +149,7 @@ class TokenServer:
                 for r in round_:
                     r.out.clear()
                     r.done = False
-                self._pending.extendleft(reversed(round_))
+                self.queue.restore_in_flight()
                 raise
-        done, self._completed = self._completed, {}
-        return done
+        return {rid: cr.result
+                for rid, cr in self.queue.pop_completed().items()}

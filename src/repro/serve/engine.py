@@ -164,8 +164,8 @@ class StreamingEngine:
                 for i, r in enumerate(fb.requests):
                     # copy: a slice view would pin the whole padded batch
                     # array in the results ledger for its lifetime
-                    self.queue.complete(r.rid, vals[i, :r.length].copy(),
-                                        idx[i, :r.length].copy())
+                    self.queue.complete(r.rid, (vals[i, :r.length].copy(),
+                                                idx[i, :r.length].copy()))
                 if on_batch is not None:
                     on_batch(fb)
         except BaseException:

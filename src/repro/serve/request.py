@@ -1,44 +1,62 @@
-"""Request/response plumbing for the batched inference engine.
+"""Request/response plumbing for the batched inference engines.
 
-One request = one utterance (a (T, F) feature matrix for the acoustic
-model; a token prompt for an LM).  The queue is deliberately simple and
+The queue is payload-agnostic: one request = one unit of work — a
+(T, F) feature matrix for the acoustic model, a TokenRequest for the
+token-LM decode surface.  It is deliberately simple and
 single-threaded: the engine drains it in arrival order, the batcher
-regroups for padding efficiency, and completion order is therefore *not*
-arrival order — results are keyed by request id and the queue tracks
-completeness so callers can assert nothing was dropped.
+regroups for padding efficiency (or generation rounds regroup by prompt
+length), and completion order is therefore *not* arrival order —
+results are keyed by request id and the queue tracks completeness so
+callers can assert nothing was dropped.
 """
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Any, Dict, Iterable, List, Optional
 
 import numpy as np
 
 
 @dataclass
 class InferenceRequest:
-    """A single utterance awaiting inference.
+    """A single unit of work awaiting inference.
 
-    feats: (T, F) float features.  ``meta`` rides along untouched (e.g.
-    the corpus utterance id for LogitStore bookkeeping).
+    ``payload`` is engine-defined (the feature engine stores a (T, F)
+    float matrix; the token server stores its TokenRequest record).
+    ``meta`` rides along untouched (e.g. the corpus utterance id for
+    LogitStore bookkeeping).
     """
     rid: int
-    feats: np.ndarray
+    payload: Any
     meta: dict = field(default_factory=dict)
 
     @property
+    def feats(self) -> np.ndarray:
+        """Feature-engine view of the payload."""
+        return self.payload
+
+    @property
     def length(self) -> int:
-        return int(self.feats.shape[0])
+        return int(self.payload.shape[0])
 
 
 @dataclass
 class CompletedRequest:
-    """Result record: top-k logits for every valid frame."""
+    """Result record; ``result`` is engine-defined — the feature engine
+    stores a (vals, idx) top-k pair, the token server its finished
+    TokenRequest."""
     rid: int
-    vals: np.ndarray            # (T, k) — shifted logit values
-    idx: np.ndarray             # (T, k) int32 — vocab indices
+    result: Any
     meta: dict = field(default_factory=dict)
+
+    @property
+    def vals(self) -> np.ndarray:          # (T, k) shifted logit values
+        return self.result[0]
+
+    @property
+    def idx(self) -> np.ndarray:           # (T, k) int32 vocab indices
+        return self.result[1]
 
 
 class RequestQueue:
@@ -61,11 +79,11 @@ class RequestQueue:
         self._done: Dict[int, CompletedRequest] = {}
         self._completion_order: deque[int] = deque(maxlen=self.ORDER_RING)
 
-    def submit(self, feats: np.ndarray, meta: Optional[dict] = None) -> int:
+    def submit(self, payload: Any, meta: Optional[dict] = None) -> int:
         rid = self._next_rid
         self._next_rid += 1
         self._pending.append(
-            InferenceRequest(rid, np.asarray(feats), dict(meta or {})))
+            InferenceRequest(rid, payload, dict(meta or {})))
         return rid
 
     def pop_pending(self, max_n: Optional[int] = None
@@ -78,9 +96,9 @@ class RequestQueue:
             out.append(req)
         return out
 
-    def complete(self, rid: int, vals: np.ndarray, idx: np.ndarray):
+    def complete(self, rid: int, result: Any):
         req = self._in_flight.pop(rid)
-        self._done[rid] = CompletedRequest(rid, vals, idx, req.meta)
+        self._done[rid] = CompletedRequest(rid, result, req.meta)
         self._completion_order.append(rid)
 
     def pop_completed(self) -> Dict[int, CompletedRequest]:
@@ -98,13 +116,20 @@ class RequestQueue:
         self._pending.clear()
         return n
 
+    def requeue(self, rids: Iterable[int]):
+        """Move specific in-flight requests back to the head of the
+        queue in rid (arrival) order — the round-forming hook: an engine
+        that popped everything but can only serve a subset this round
+        returns the rest without losing their place."""
+        back = sorted((self._in_flight.pop(r) for r in rids),
+                      key=lambda r: r.rid)
+        self._pending.extendleft(reversed(back))
+
     def restore_in_flight(self):
         """Put popped-but-unfulfilled requests back at the head of the
         queue (rid order) — the engine's failure-recovery hook, so a
         forward error mid-drain never strands its sibling requests."""
-        stranded = sorted(self._in_flight.values(), key=lambda r: r.rid)
-        self._in_flight.clear()
-        self._pending.extendleft(reversed(stranded))
+        self.requeue(list(self._in_flight))
 
     @property
     def n_submitted(self) -> int:
@@ -113,6 +138,14 @@ class RequestQueue:
     @property
     def n_pending(self) -> int:
         return len(self._pending)
+
+    @property
+    def n_in_flight(self) -> int:
+        return len(self._in_flight)
+
+    @property
+    def n_completed(self) -> int:
+        return len(self._done)
 
     @property
     def drained(self) -> bool:

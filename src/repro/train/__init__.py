@@ -1,0 +1,28 @@
+"""Unified Trainer API (ISSUE 2).
+
+  TrainState            — params + opt + step + rng + strategy state
+  DistributedStrategy   — Local / BMUFVmap / BMUFShardMap / GTC
+  DataSource            — iterables of TrainBatch (epoch_source,
+                          distill_shard_source, scheduled_source, chain)
+  Trainer               — fit() with one lr-as-argument jitted update
+                          per loss kind, periodic checkpointing,
+                          mid-stage resume, pluggable metrics sinks
+"""
+from repro.train.data import (DataSource, TrainBatch, chain,
+                              distill_shard_source, epoch_source,
+                              scheduled_source)
+from repro.train.metrics import (JsonlSink, ListSink, MetricsSink,
+                                 TeeSink)
+from repro.train.state import TrainState
+from repro.train.strategies import (GTC, BMUFShardMap, BMUFVmap,
+                                    DistributedStrategy, Local,
+                                    init_opt, make_sgd_step)
+from repro.train.trainer import Trainer
+
+__all__ = [
+    "TrainState", "Trainer", "TrainBatch", "DataSource",
+    "DistributedStrategy", "Local", "BMUFVmap", "BMUFShardMap", "GTC",
+    "make_sgd_step", "init_opt",
+    "epoch_source", "distill_shard_source", "scheduled_source", "chain",
+    "MetricsSink", "ListSink", "JsonlSink", "TeeSink",
+]

@@ -1,0 +1,79 @@
+"""DataSource: anything that yields (batch, lr, loss-kind) work items.
+
+A data source is just an iterable of ``TrainBatch`` — the Trainer
+consumes them in order, groups them into strategy-sized blocks, and
+counts consumption so a killed run resumes mid-stream.  Three source
+builders cover the paper's stages:
+
+  epoch_source          labeled CE epochs (baseline / teacher / sMBR)
+  distill_shard_source  unlabeled batches joined with LogitStore shards
+  scheduled_source      the §3.3 scheduled-learning phase stream:
+                        unlabeled distill sub-epochs interleaved with
+                        labeled CE passes, per-phase LR from the
+                        exponential schedule in core/scheduled.py
+
+Sources must be *deterministic* (same items in the same order each time
+they are built) — resume replays the stream and skips the consumed
+prefix, which is exact because everything here derives from seeded
+synthetic data.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable, Iterator
+
+from repro.core import scheduled
+
+
+@dataclass
+class TrainBatch:
+    """One microbatch of work: data pytree + the LR and loss to use."""
+    data: Any
+    lr: float
+    loss: str = "default"
+
+
+DataSource = Iterable[TrainBatch]
+
+
+def epoch_source(batches_fn: Callable[[int], Iterable[dict]],
+                 n_epochs: int, lr, loss: str = "default"
+                 ) -> Iterator[TrainBatch]:
+    """n_epochs passes over batches_fn(epoch); lr a float or fn(epoch)."""
+    for ep in range(n_epochs):
+        lr_ep = lr(ep) if callable(lr) else lr
+        for b in batches_fn(ep):
+            yield TrainBatch(b, lr_ep, loss)
+
+
+def distill_shard_source(batches, store, lo: int, hi: int, lr: float,
+                         loss: str = "distill_topk"
+                         ) -> Iterator[TrainBatch]:
+    """Unlabeled batches [lo, hi) joined with their LogitStore shards
+    (shard i holds batch i's teacher top-k — the trainer-aligned layout
+    stage_targets writes)."""
+    for bi in range(lo, min(hi, len(batches))):
+        b = batches[bi]
+        vals, idx = store.read_shard(bi)
+        yield TrainBatch({"feats": b["feats"], "mask": b["mask"],
+                          "topk_vals": vals, "topk_idx": idx}, lr, loss)
+
+
+def scheduled_source(cfg: scheduled.ScheduleConfig, *,
+                     unlabeled: Callable[[scheduled.Phase],
+                                         Iterable[TrainBatch]],
+                     labeled: Callable[[scheduled.Phase],
+                                       Iterable[TrainBatch]]
+                     ) -> Iterator[TrainBatch]:
+    """Walk the paper's phase schedule, delegating batch production to
+    per-phase callbacks (which see the phase's lr / chunking / offset)."""
+    for phase in scheduled.schedule(cfg):
+        fn = unlabeled if phase.kind == "unlabeled" else labeled
+        yield from fn(phase)
+
+
+def chain(*sources: DataSource) -> Iterator[TrainBatch]:
+    """Concatenate sources into one resumable stream (e.g. chunked
+    epochs followed by a full-sequence fine-tune)."""
+    return itertools.chain(*sources)

@@ -1,0 +1,47 @@
+"""TrainState: the single carried state of every trainer in the repo.
+
+One pytree holds everything a training loop mutates — params, optimizer
+state, the update counter, an RNG key, and whatever the distributed
+strategy carries between updates (BMUF's block momentum + worker
+replicas, GTC's error-feedback residual).  ``params`` is always the
+*canonical* model: for BMUF it is theta_g, never a worker replica, so
+evaluation and checkpoint consumers are strategy-agnostic.
+
+The state round-trips through ``repro.checkpoint`` as a plain dict
+(``to_dict`` / ``from_dict``) so stored checkpoints carry no class
+structure — robust to refactors, partially loadable, and the RNG key is
+stored as raw key data (npz has no key dtype).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class TrainState:
+    params: Any                 # canonical model params (theta_g for BMUF)
+    opt_state: Any              # possibly worker-stacked (BMUF)
+    strategy_state: Any         # residuals / block momentum / replicas
+    step: jax.Array             # () int32 — optimizer updates taken
+    rng: jax.Array              # jax.random key
+
+    def replace(self, **kw) -> "TrainState":
+        return dataclasses.replace(self, **kw)
+
+    def to_dict(self) -> dict:
+        return {"params": self.params, "opt": self.opt_state,
+                "strategy": self.strategy_state, "step": self.step,
+                "rng": jax.random.key_data(self.rng)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TrainState":
+        return cls(params=d["params"], opt_state=d["opt"],
+                   strategy_state=d["strategy"],
+                   step=jnp.asarray(d["step"], jnp.int32),
+                   rng=jax.random.wrap_key_data(d["rng"]))

@@ -1,0 +1,146 @@
+"""Trainer.fit(): the one loop every stage of the paper's recipe runs.
+
+    trainer = Trainer(strategy, {"ce": loss_fn}, checkpoint=store,
+                      ckpt_every=25, metrics=sink)
+    state = trainer.init_state(params)
+    state = trainer.fit(state, source)
+
+One jitted update per (loss kind x batch shape), with the learning rate
+a *traced argument* — an LR schedule sweeping a hundred phases reuses
+the same executable (the seed pipeline re-jitted its step on every
+phase change).  The strategy decides how many source microbatches one
+update consumes (tau*W for BMUF) and what the update does; the source
+decides what data arrives with which lr/loss; the Trainer only grooms
+batches into blocks, counts, checkpoints, and emits metrics.
+
+Resume: every ``ckpt_every`` updates the full TrainState plus the
+consumed-microbatch count goes to the CheckpointStore; ``fit`` with
+``resume=True`` (default) reloads the latest state and fast-forwards
+the (deterministic) source past the consumed prefix, so a killed stage
+continues instead of restarting.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointStore
+from repro.train.data import DataSource, TrainBatch
+from repro.train.metrics import MetricsSink
+from repro.train.state import TrainState
+from repro.train.strategies import DistributedStrategy
+
+
+def _shape_sig(data):
+    """Hashable (shape, dtype-free) signature of a batch pytree."""
+    return tuple(tuple(getattr(l, "shape", ()))
+                 for l in jax.tree_util.tree_leaves(data))
+
+
+class Trainer:
+    def __init__(self, strategy: DistributedStrategy,
+                 loss_fns: Union[Callable, Dict[str, Callable]], *,
+                 checkpoint: Optional[CheckpointStore] = None,
+                 ckpt_every: int = 0,
+                 metrics: Optional[MetricsSink] = None):
+        self.strategy = strategy
+        if callable(loss_fns):
+            loss_fns = {"default": loss_fns}
+        self.updates = {tag: jax.jit(strategy.make_update(fn))
+                        for tag, fn in loss_fns.items()}
+        self.checkpoint = checkpoint
+        self.ckpt_every = ckpt_every
+        self.metrics = metrics
+
+    # ------------------------------------------------------------- state
+
+    def init_state(self, params, *, seed: int = 0) -> TrainState:
+        return TrainState(params=params,
+                          opt_state=self.strategy.init_opt(params),
+                          strategy_state=self.strategy.init_state(params),
+                          step=jnp.zeros((), jnp.int32),
+                          rng=jax.random.key(seed))
+
+    def _save(self, state: TrainState, consumed: int):
+        self.checkpoint.save(int(state.step), state.to_dict(),
+                             meta={"consumed": consumed})
+
+    def _try_resume(self, state: TrainState):
+        """-> (state, consumed) from the latest checkpoint, or None."""
+        if self.checkpoint is None:
+            return None
+        try:
+            tree, step = self.checkpoint.load(state.to_dict())
+        except FileNotFoundError:
+            return None
+        meta = self.checkpoint.load_meta(step) or {}
+        return TrainState.from_dict(tree), int(meta.get("consumed", 0))
+
+    # --------------------------------------------------------------- fit
+
+    def fit(self, state: TrainState, source: DataSource, *,
+            resume: bool = True,
+            max_updates: Optional[int] = None) -> TrainState:
+        consumed = 0
+        if resume:
+            loaded = self._try_resume(state)
+            if loaded is not None:
+                state, consumed = loaded
+        # step is mirrored on the host (updates are +1 each) so the loop
+        # never blocks on the device unless a sink/checkpoint needs to
+        step = start_step = int(state.step)
+        need = self.strategy.microbatches
+        n_seen = 0
+        group, gtag, gsig, glr = [], None, None, None
+        for tb in source:
+            n_seen += 1
+            if n_seen <= consumed:          # resume: replay + skip
+                continue
+            # a partial block cannot straddle a loss-kind, batch-shape,
+            # or lr boundary; drop it (BMUF block semantics — blocks
+            # stack their microbatches, so ragged full-sequence batches
+            # only fill blocks with exact shape-mates, and a block never
+            # blurs two schedule phases' lrs.  Local/GTC never hit this:
+            # need == 1 means no block is ever partial)
+            sig = _shape_sig(tb.data) if need > 1 else None
+            if group and (tb.loss != gtag or sig != gsig
+                          or tb.lr != glr):
+                group = []
+            if not group:
+                gtag, gsig, glr = tb.loss, sig, tb.lr
+            group.append(tb.data)
+            if len(group) < need:
+                continue
+            if gtag not in self.updates:
+                raise KeyError(
+                    f"source yielded loss kind {gtag!r} but the Trainer "
+                    f"only has {sorted(self.updates)}")
+            batch = self.strategy.stack(group)
+            state, metrics = self.updates[gtag](
+                state, batch, jnp.asarray(glr, jnp.float32))
+            group = []
+            consumed = n_seen
+            step += 1
+            if self.metrics is not None:
+                host = jax.device_get(metrics)
+                self.metrics.emit(step, gtag,
+                                  {k: float(v) for k, v in host.items()
+                                   if getattr(v, "size", 1) == 1})
+            if (self.checkpoint is not None and self.ckpt_every
+                    and step % self.ckpt_every == 0):
+                self._save(state, consumed)
+            if max_updates is not None and step - start_step >= max_updates:
+                break
+        return state
+
+    # ------------------------------------------------------------ finish
+
+    def finalize(self, state: TrainState):
+        """Mark the run complete: drop the resume checkpoints so a fresh
+        invocation of the same stage trains anew (a *killed* run, by
+        contrast, still has them and resumes)."""
+        if self.checkpoint is not None:
+            self.checkpoint.clear()
+        return state

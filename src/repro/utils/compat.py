@@ -1,0 +1,24 @@
+"""Version-compat shims for jax API churn.
+
+``AbstractMesh``'s constructor changed across jax releases: 0.4.37 takes
+a single shape tuple ``((name, size), ...)``; 0.5+ split it into
+``(axis_sizes, axis_names)``.  The tests build device-free meshes for
+divisibility checks, so they go through this helper instead of pinning
+one signature (ROADMAP follow-up: lets the ``jax>=0.4.37,<0.5`` pin
+relax once a 0.5+ toolchain is validated).
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+
+def abstract_mesh(axes: Sequence[Tuple[str, int]]):
+    """axes: ((name, size), ...) -> jax.sharding.AbstractMesh."""
+    from jax.sharding import AbstractMesh
+    axes = tuple((str(n), int(s)) for n, s in axes)
+    try:
+        return AbstractMesh(axes)                      # jax 0.4.37 form
+    except TypeError:
+        sizes = tuple(s for _, s in axes)              # jax 0.5+ form
+        names = tuple(n for n, _ in axes)
+        return AbstractMesh(sizes, names)

@@ -48,9 +48,9 @@ def test_train_step_smoke(arch):
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
     batch = concrete_batch(cfg, SMOKE_TRAIN)
-    step = jax.jit(make_train_step(model, cfg, loss_kind="ce", lr=1e-2))
+    step = jax.jit(make_train_step(model, cfg, loss_kind="ce"))
     opt = init_opt_state(params)
-    params2, opt2, metrics = step(params, opt, batch)
+    params2, opt2, metrics = step(params, opt, batch, 1e-2)
     assert jnp.isfinite(metrics["loss"]), arch
     # params actually move
     moved = jax.tree_util.tree_map(
@@ -66,10 +66,9 @@ def test_distill_step_smoke(arch):
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
     batch = concrete_batch(cfg, SMOKE_TRAIN, topk=5)
-    step = jax.jit(make_train_step(model, cfg, loss_kind="distill_topk",
-                                   lr=1e-2))
+    step = jax.jit(make_train_step(model, cfg, loss_kind="distill_topk"))
     opt = init_opt_state(params)
-    _, _, metrics = step(params, opt, batch)
+    _, _, metrics = step(params, opt, batch, 1e-2)
     assert jnp.isfinite(metrics["loss"]), arch
 
 

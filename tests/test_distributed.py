@@ -22,8 +22,9 @@ def quad_loss(params, batch):
     return jnp.mean(e ** 2), {"loss": jnp.mean(e ** 2)}
 
 
-def quad_step(lr=0.05):
-    def step(params, opt_state, batch):
+def quad_step():
+    """lr is a traced argument — the contract every strategy step uses."""
+    def step(params, opt_state, batch, lr):
         (_, m), g = jax.value_and_grad(quad_loss, has_aux=True)(params,
                                                                 batch)
         params, opt_state = momentum_update(params, g, opt_state, lr=lr,
@@ -52,12 +53,12 @@ def test_bmuf_single_worker_tau1_equals_sgd():
     opt = jax.vmap(lambda _: momentum_init(params))(jnp.arange(1))
     block = jax.jit(B.make_bmuf_block_step(quad_step(), cfg))
     batches = {"x": x[None, None], "y": y[None, None]}
-    state, opt, _ = block(state, opt, batches)
+    state, opt, _ = block(state, opt, batches, 0.05)
 
     ref_params = {"w": jnp.zeros((8,))}
     ref_opt = momentum_init(ref_params)
     ref_params, ref_opt, _ = quad_step()(ref_params, ref_opt,
-                                         {"x": x, "y": y})
+                                         {"x": x, "y": y}, 0.05)
     np.testing.assert_allclose(np.asarray(state["theta_g"]["w"]),
                                np.asarray(ref_params["w"]), rtol=1e-5,
                                atol=1e-7)
@@ -91,40 +92,51 @@ def test_bmuf_converges_on_quadratic():
                        block_lr=1.0)
     state = B.bmuf_init(params, cfg)
     opt = jax.vmap(lambda _: momentum_init(params))(jnp.arange(4))
-    block = jax.jit(B.make_bmuf_block_step(quad_step(lr=0.05), cfg))
+    block = jax.jit(B.make_bmuf_block_step(quad_step(), cfg))
     rng = np.random.default_rng(1)
     start = float(quad_loss(state["theta_g"], {"x": x, "y": y})[0])
     for it in range(60):
         sel = rng.integers(0, 256, (2, 4, 32))
         batches = {"x": jnp.asarray(np.asarray(x)[sel]),
                    "y": jnp.asarray(np.asarray(y)[sel])}
-        state, opt, ms = block(state, opt, batches)
+        state, opt, ms = block(state, opt, batches, 0.05)
     final = float(quad_loss(state["theta_g"], {"x": x, "y": y})[0])
     assert final < 0.05 * start, (start, final)
 
 
 def test_sharded_bmuf_matches_vmap_path():
-    """shard_map BMUF on a 1-device mesh == the vmap reference."""
+    """shard_map BMUF on a 1-device CPU mesh == the vmap reference —
+    bitwise on theta_g AND delta, held across >= 2 blocks (the second
+    block exercises the carried block momentum and the Nesterov
+    restart, not just the first sync)."""
     x, y = _problem(n=64)
     params = {"w": jnp.zeros((8,))}
     cfg = B.BMUFConfig(n_workers=2, block_steps=2, block_momentum=0.5,
                        block_lr=1.0)
-    batches = {"x": jnp.broadcast_to(x[None, None], (2, 2, 64, 8)),
-               "y": jnp.broadcast_to(y[None, None], (2, 2, 64))}
+    rng = np.random.default_rng(7)
 
     state_v = B.bmuf_init(params, cfg)
     opt_v = jax.vmap(lambda _: momentum_init(params))(jnp.arange(2))
     block_v = jax.jit(B.make_bmuf_block_step(quad_step(), cfg))
-    sv, _, _ = block_v(state_v, opt_v, batches)
 
     mesh = jax.make_mesh((1,), ("data",))
     state_s = B.bmuf_init(params, cfg)
     opt_s = jax.vmap(lambda _: momentum_init(params))(jnp.arange(2))
     block_s = B.make_sharded_bmuf_block_step(quad_step(), cfg, mesh,
                                              worker_axes=("data",))
-    ss, _, _ = block_s(state_s, opt_s, batches)
-    np.testing.assert_allclose(np.asarray(ss["theta_g"]["w"]),
-                               np.asarray(sv["theta_g"]["w"]), rtol=1e-6)
+
+    for blk in range(3):
+        sel = rng.integers(0, 64, (2, 2, 32))
+        batches = {"x": jnp.asarray(np.asarray(x)[sel]),
+                   "y": jnp.asarray(np.asarray(y)[sel])}
+        state_v, opt_v, _ = block_v(state_v, opt_v, batches, 0.05)
+        state_s, opt_s, _ = block_s(state_s, opt_s, batches, 0.05)
+        np.testing.assert_array_equal(np.asarray(state_s["theta_g"]["w"]),
+                                      np.asarray(state_v["theta_g"]["w"]),
+                                      err_msg=f"theta_g, block {blk}")
+        np.testing.assert_array_equal(np.asarray(state_s["delta"]["w"]),
+                                      np.asarray(state_v["delta"]["w"]),
+                                      err_msg=f"delta, block {blk}")
 
 
 # -------------------------------------------------------------------- GTC
@@ -189,6 +201,38 @@ def test_gtc_ring_converges_to_mean():
     ref = rounds * np.mean([np.asarray(g["w"]) for g in grads], axis=0)
     # per-element residual is bounded by tau per worker
     np.testing.assert_allclose(np.asarray(total), ref, atol=4 * tau)
+
+
+def test_gtc_strategy_matches_compress_tree():
+    """The train.GTC strategy's update == the manual reference: grads
+    compressed by gtc_lib.compress_tree against the carried residual,
+    with the *sent* sparse tensor driving the optimizer."""
+    from repro.train import GTC as GTCStrategy, Trainer
+    x, y = _problem(n=32)
+    params = {"w": jnp.zeros((8,))}
+    tau = 1e-3
+    strat = GTCStrategy(G.GTCConfig(tau=tau, n_workers=1), clip=0.0)
+    tr = Trainer(strat, {"quad": quad_loss})
+    state = tr.init_state(params)
+    lr = 0.05
+
+    ref_params = {"w": jnp.zeros((8,))}
+    ref_opt = momentum_init(ref_params)
+    ref_res = {"w": jnp.zeros((8,))}
+    batch = {"x": x, "y": y}
+    for _ in range(3):
+        state, _ = tr.updates["quad"](state, batch,
+                                      jnp.asarray(lr, jnp.float32))
+        (_, _), g = jax.value_and_grad(quad_loss, has_aux=True)(
+            ref_params, batch)
+        send, ref_res = G.compress_tree(g, ref_res, tau)
+        ref_params, ref_opt = momentum_update(ref_params, send, ref_opt,
+                                              lr=lr)
+    np.testing.assert_allclose(np.asarray(state.params["w"]),
+                               np.asarray(ref_params["w"]), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(state.strategy_state["residual"]["w"]),
+        np.asarray(ref_res["w"]), rtol=1e-6)
 
 
 def test_adaptive_tau_density():

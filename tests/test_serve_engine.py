@@ -455,7 +455,8 @@ def test_token_server_failure_restores_round():
     srv.serve = boom
     with pytest.raises(RuntimeError):
         srv.drain()
-    assert len(srv._pending) == 2 and not srv._completed
+    assert srv.queue.n_pending == 2 and srv.queue.n_completed == 0
+    assert srv.queue.n_in_flight == 0      # nothing stranded in flight
     srv.serve = good
     done = srv.drain()
     assert sorted(done) == sorted(rids)

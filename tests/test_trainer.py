@@ -1,0 +1,247 @@
+"""Unified Trainer API (ISSUE 2): compile-count pinning, strategy
+equivalences through Trainer.fit, mid-stream resume, data sources,
+metrics sinks, and TrainState checkpoint round-trips."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointStore
+from repro.distributed.bmuf import BMUFConfig
+from repro.distributed.gtc import GTCConfig
+from repro.optim import momentum_init, momentum_update
+from repro.train import (GTC, BMUFVmap, JsonlSink, ListSink, Local,
+                         TrainBatch, Trainer, TrainState, chain,
+                         epoch_source, make_sgd_step)
+
+D = 8
+
+
+def quad_loss(params, batch):
+    e = batch["x"] @ params["w"] - batch["y"]
+    return jnp.mean(e ** 2), {"loss": jnp.mean(e ** 2)}
+
+
+def _problem(seed=0, n=64):
+    rng = np.random.default_rng(seed)
+    w_true = rng.normal(size=(D,))
+    x = rng.normal(size=(n, D)).astype(np.float32)
+    y = (x @ w_true).astype(np.float32)
+    return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+
+def _params():
+    return {"w": jnp.zeros((D,))}
+
+
+def _source(batch, lrs, loss="quad"):
+    return [TrainBatch(batch, lr, loss) for lr in lrs]
+
+
+# ------------------------------------------------------- compile counts
+
+def test_single_compile_across_lr_phases():
+    """The tentpole perf fix: lr is traced, so an LR schedule sweeping
+    many phases reuses ONE executable per (loss kind, batch shape) —
+    the seed pipeline re-jitted its step on every phase change."""
+    batch = _problem()
+    tr = Trainer(Local(clip=0.0), {"quad": quad_loss})
+    state = tr.init_state(_params())
+    lrs = [0.1 * (0.85 ** i) for i in range(6)]     # 6 distinct lr phases
+    state = tr.fit(state, _source(batch, lrs), resume=False)
+    assert int(state.step) == 6
+    assert tr.updates["quad"]._cache_size() == 1    # one compile, 6 lrs
+
+
+def test_make_train_step_single_compile():
+    """launch.steps.make_train_step: same property on the real AM step
+    (the ssl_pipeline re-jit regression pin)."""
+    from repro.configs.lstm_am_7khr import CONFIG
+    from repro.configs.base import LayerSpec, Segment
+    from repro.launch.steps import init_opt_state, make_train_step
+    from repro.models import build_model
+
+    cfg = CONFIG.replace(
+        lstm_hidden=16, feat_dim=6, n_senones=11, vocab_size=11,
+        segments=(Segment((LayerSpec(mixer="lstm", ffn="none"),),
+                          repeat=1),))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    step = jax.jit(make_train_step(model, cfg, loss_kind="ce"))
+    opt = init_opt_state(params)
+    rng = np.random.default_rng(0)
+    batch = {"feats": jnp.asarray(rng.normal(size=(2, 12, 6)),
+                                  jnp.float32),
+             "labels": jnp.asarray(rng.integers(0, 11, (2, 12))),
+             "mask": jnp.ones((2, 12), jnp.float32)}
+    for lr in (5e-2, 2e-2, 1e-2):
+        params, opt, m = step(params, opt, batch, lr)
+        assert jnp.isfinite(m["loss"])
+    assert step._cache_size() == 1
+
+
+# --------------------------------------------------- strategy via fit()
+
+def test_local_fit_converges():
+    batch = _problem(n=256)
+    sink = ListSink()
+    tr = Trainer(Local(clip=0.0), {"quad": quad_loss}, metrics=sink)
+    state = tr.fit(tr.init_state(_params()),
+                   _source(batch, [0.05] * 60), resume=False)
+    assert sink.values("loss")[-1] < 0.05 * sink.values("loss")[0]
+    assert int(state.step) == 60
+
+
+def test_bmuf_fit_matches_manual_block_step():
+    """BMUFVmap through Trainer.fit == driving bmuf_lib's block step by
+    hand: same theta_g after the same microbatch stream."""
+    from repro.distributed import bmuf as bmuf_lib
+    cfg = BMUFConfig(n_workers=2, block_steps=2, block_momentum=0.5)
+    rng = np.random.default_rng(3)
+    full = _problem(n=64)
+    micro = []
+    for _ in range(8):                       # 2 full blocks of tau*W=4
+        sel = rng.integers(0, 64, (16,))
+        micro.append({"x": full["x"][sel], "y": full["y"][sel]})
+
+    strat = BMUFVmap(cfg, clip=0.0)
+    tr = Trainer(strat, {"quad": quad_loss})
+    state = tr.fit(tr.init_state(_params()),
+                   [TrainBatch(m, 0.05, "quad") for m in micro],
+                   resume=False)
+    assert int(state.step) == 2              # 8 microbatches / (tau*W)
+
+    step = make_sgd_step(quad_loss, clip=0.0)
+    block = jax.jit(bmuf_lib.make_bmuf_block_step(step, cfg))
+    bstate = bmuf_lib.bmuf_init(_params(), cfg)
+    opt = jax.vmap(lambda _: momentum_init(_params()))(jnp.arange(2))
+    for blk in range(2):
+        group = micro[blk * 4:(blk + 1) * 4]
+        batches = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs).reshape(2, 2, *xs[0].shape), *group)
+        bstate, opt, _ = block(bstate, opt, batches, 0.05)
+    np.testing.assert_allclose(np.asarray(state.params["w"]),
+                               np.asarray(bstate["theta_g"]["w"]),
+                               rtol=1e-6)
+
+
+def test_bmuf_partial_block_dropped_at_loss_boundary():
+    """A block cannot straddle a loss-kind change: the partial group is
+    dropped (BMUF semantics), and full blocks on either side still run."""
+    cfg = BMUFConfig(n_workers=2, block_steps=1)
+    batch = _problem(n=16)
+    src = ([TrainBatch(batch, 0.05, "quad")] * 2      # 1 full block
+           + [TrainBatch(batch, 0.05, "quad")]        # partial -> dropped
+           + [TrainBatch(batch, 0.05, "other")] * 2)  # 1 full block
+    tr = Trainer(BMUFVmap(cfg, clip=0.0),
+                 {"quad": quad_loss, "other": quad_loss})
+    state = tr.fit(tr.init_state(_params()), src, resume=False)
+    assert int(state.step) == 2
+
+
+# --------------------------------------------------------------- resume
+
+def test_fit_resumes_from_periodic_checkpoint(tmp_path):
+    """Kill-and-reinvoke: a run interrupted after the step-4 checkpoint
+    resumes there (not from scratch) and lands bitwise on the
+    uninterrupted result; finalize() retires the resume state."""
+    batch = _problem(n=64)
+    lrs = [0.05 * (0.9 ** i) for i in range(10)]
+
+    # uninterrupted reference
+    ref = Trainer(Local(clip=0.0), {"quad": quad_loss})
+    ref_state = ref.fit(ref.init_state(_params()), _source(batch, lrs),
+                        resume=False)
+
+    store = CheckpointStore(os.path.join(tmp_path, "state"))
+    t1 = Trainer(Local(clip=0.0), {"quad": quad_loss},
+                 checkpoint=store, ckpt_every=2)
+    t1.fit(t1.init_state(_params()), _source(batch, lrs), max_updates=5)
+    assert store.latest() == 4               # ckpts at 2 and 4; kill at 5
+
+    t2 = Trainer(Local(clip=0.0), {"quad": quad_loss},
+                 checkpoint=store, ckpt_every=2)
+    sink = ListSink()
+    t2.metrics = sink
+    state = t2.fit(t2.init_state(_params()), _source(batch, lrs))
+    assert int(state.step) == 10
+    # resumed run only executed steps 5..10, not 1..10
+    assert len(sink) == 6
+    np.testing.assert_array_equal(np.asarray(state.params["w"]),
+                                  np.asarray(ref_state.params["w"]))
+    t2.finalize(state)
+    assert store.latest() is None            # completed: resume retired
+
+
+def test_resume_preserves_strategy_state(tmp_path):
+    """GTC's error-feedback residual survives the checkpoint boundary —
+    resume must not silently zero strategy state."""
+    batch = _problem(n=32)
+    lrs = [0.05] * 6
+    mk = lambda: Trainer(GTC(GTCConfig(tau=1e-3, n_workers=1), clip=0.0),
+                         {"quad": quad_loss},
+                         checkpoint=CheckpointStore(
+                             os.path.join(tmp_path, "state")),
+                         ckpt_every=2)
+    ref = Trainer(GTC(GTCConfig(tau=1e-3, n_workers=1), clip=0.0),
+                  {"quad": quad_loss})
+    ref_state = ref.fit(ref.init_state(_params()), _source(batch, lrs),
+                        resume=False)
+    t1 = mk()
+    t1.fit(t1.init_state(_params()), _source(batch, lrs), max_updates=3)
+    t2 = mk()
+    state = t2.fit(t2.init_state(_params()), _source(batch, lrs))
+    np.testing.assert_array_equal(
+        np.asarray(state.strategy_state["residual"]["w"]),
+        np.asarray(ref_state.strategy_state["residual"]["w"]))
+    np.testing.assert_array_equal(np.asarray(state.params["w"]),
+                                  np.asarray(ref_state.params["w"]))
+
+
+def test_trainstate_dict_roundtrip():
+    tr = Trainer(Local(), {"quad": quad_loss})
+    state = tr.init_state(_params(), seed=3)
+    back = TrainState.from_dict(
+        jax.tree_util.tree_map(np.asarray, state.to_dict()))
+    assert int(back.step) == 0
+    np.testing.assert_array_equal(np.asarray(back.params["w"]),
+                                  np.asarray(state.params["w"]))
+    # rng round-trips through raw key data
+    a = jax.random.uniform(state.rng)
+    b = jax.random.uniform(back.rng)
+    assert float(a) == float(b)
+
+
+# ------------------------------------------------------ sources + sinks
+
+def test_epoch_source_and_chain():
+    batch = _problem(n=8)
+    src = list(chain(
+        epoch_source(lambda ep: [batch, batch], 2, lambda ep: 0.1 / (ep + 1),
+                     "ce"),
+        epoch_source(lambda ep: [batch], 1, 0.01, "ft")))
+    assert len(src) == 5
+    assert [tb.loss for tb in src] == ["ce"] * 4 + ["ft"]
+    assert src[0].lr == pytest.approx(0.1) and src[2].lr == pytest.approx(0.05)
+    assert src[-1].lr == pytest.approx(0.01)
+
+
+def test_unknown_loss_kind_raises():
+    tr = Trainer(Local(), {"quad": quad_loss})
+    with pytest.raises(KeyError):
+        tr.fit(tr.init_state(_params()),
+               [TrainBatch(_problem(n=8), 0.1, "nope")], resume=False)
+
+
+def test_jsonl_sink(tmp_path):
+    import json
+    path = os.path.join(tmp_path, "m", "metrics.jsonl")
+    sink = JsonlSink(path)
+    tr = Trainer(Local(clip=0.0), {"quad": quad_loss}, metrics=sink)
+    tr.fit(tr.init_state(_params()), _source(_problem(n=8), [0.1] * 3),
+           resume=False)
+    rows = [json.loads(l) for l in open(path)]
+    assert [r["step"] for r in rows] == [1, 2, 3]
+    assert all(r["tag"] == "quad" and np.isfinite(r["loss"]) for r in rows)
