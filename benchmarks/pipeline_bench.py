@@ -1,0 +1,249 @@
+"""Data-plane throughput: the prefetching feed vs the synchronous feed,
+and N-worker sharded target generation.
+
+  PYTHONPATH=src python benchmarks/pipeline_bench.py
+  PYTHONPATH=src python benchmarks/pipeline_bench.py --updates 40 --io-ms 20
+
+**Feed benchmark** — the same distill workload (checksum-verified
+LogitStore v2 shard reads joined with unlabeled batches, the student's
+``distill_topk`` loss) driven through ``Trainer.fit`` twice: once
+synchronously, once through ``PrefetchingSource``.  The run is made
+*decode-bound* the way a real million-hour run is: every shard read
+pays checksum verification plus ``--io-ms`` of simulated remote-storage
+fetch latency (the petabyte-scale regime — shards stream from network
+storage, not local disk; see arXiv:1904.10584).  The prefetching feed
+overlaps that host-side decode with the jitted update, so steps/sec
+should approach ``(t_decode + t_update) / max(t_decode, t_update)``
+times the synchronous rate; the recorded claim (asserted here and in
+the tier-2 CI job) is **>= 1.3x**.
+
+**Generation benchmark** — ``generate_sharded`` at workers=1 vs
+workers=2 on the same batch corpus (fresh store each): records
+shards/sec and the ledger/manifest overhead of partitioning.  On one
+CPU the workers are time-sliced, so this measures the *overhead* of the
+claim protocol (near-zero), not a speedup — the scale-out claim is
+structural (disjoint ranges, per-worker engines), and the e2e pipeline
+exercises it at workers=2.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LayerSpec, Segment
+from repro.configs.lstm_am_7khr import CONFIG
+from repro.launch.steps import make_loss_fn
+from repro.models import build_model
+from repro.pipeline import generate_sharded
+from repro.store import LogitStoreV2
+from repro.train import ListSink, Local, TrainBatch, Trainer
+
+V = 49          # senones
+K = 10
+
+
+def _corpus(n_batches, b, s, feat_dim, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{"feats": rng.normal(size=(b, s, feat_dim)).astype(np.float32),
+             "mask": np.ones((b, s), np.float32)} for _ in range(n_batches)]
+
+
+def _fill_store(root, batches, seed=1):
+    rng = np.random.default_rng(seed)
+    store = LogitStoreV2(root, k=K, vocab=V)
+    for j, bt in enumerate(batches):
+        bsz, slen = bt["mask"].shape
+        vals = rng.normal(size=(bsz, slen, K)).astype(np.float32)
+        vals = vals - vals.max(-1, keepdims=True)
+        idx = rng.integers(0, V, (bsz, slen, K)).astype(np.int32)
+        store.append_shard(j, vals, idx)
+    return store
+
+
+def _feed_source(batches, store, lr, io_ms):
+    """The decode-bound source: verified shard reads + simulated
+    remote-store fetch latency, joined with the unlabeled batches."""
+    def src():
+        for bi, b in enumerate(batches):
+            vals, idx = store.read_shard(bi, verify=True)
+            if io_ms:
+                time.sleep(io_ms / 1000.0)
+            yield TrainBatch({"feats": b["feats"], "mask": b["mask"],
+                              "topk_vals": np.asarray(vals),
+                              "topk_idx": np.asarray(idx)},
+                             lr, "distill_topk")
+    return src
+
+
+def calibrate_io_ms(args, model, cfg, batches, store):
+    """Auto-balance the simulated fetch latency to the measured
+    update+decode cost, so the run is decode-bound *by construction* on
+    any hardware — the >=1.3x gate then measures the feed's overlap,
+    not the CI box's model-vs-io speed ratio."""
+    loss_fns = {"distill_topk": make_loss_fn(model, cfg, "distill_topk")}
+    trainer = Trainer(Local(clip=0.0), loss_fns, metrics=ListSink())
+    src = _feed_source(batches, store, args.lr, io_ms=0)
+    state = trainer.init_state(model.init(jax.random.key(0)))
+    state = trainer.fit(state, src(), resume=False, max_updates=2)  # warm
+    jax.block_until_ready(state.params)
+    n = min(8, len(batches))
+    walls = []
+    for _ in range(3):          # min-of-3: a GC pause or CPU spike in the
+        t0 = time.time()        # calibration window must not inflate io
+        state = trainer.fit(state, src(), resume=False, max_updates=n)
+        jax.block_until_ready(state.params)
+        walls.append(time.time() - t0)
+    step_ms = min(walls) / n * 1000.0
+    # match io to the step cost so the theoretical overlap win is ~2x on
+    # any box; the floor only guards sleep-timer granularity and stays
+    # low enough that even step_ms ~2ms keeps the >=1.3x gate reachable
+    return round(max(3.0, step_ms), 1)
+
+
+def bench_feed(args, model, cfg, batches, store):
+    loss_fns = {"distill_topk": make_loss_fn(model, cfg, "distill_topk")}
+    params = model.init(jax.random.key(0))
+    records = []
+    for label, depth in (("sync", 0), ("prefetch", args.depth)):
+        trainer = Trainer(Local(clip=0.0), loss_fns, metrics=ListSink(),
+                          prefetch=depth)
+        src = _feed_source(batches, store, args.lr, args.io_ms)
+        # warmup compiles + page caches
+        state = trainer.init_state(params)
+        state = trainer.fit(state, src(), resume=False, max_updates=2)
+        jax.block_until_ready(state.params)
+
+        # best-of-N: thread scheduling on a shared box is noisy; the
+        # fastest repeat is the feed's achievable rate
+        walls = []
+        for _ in range(args.repeats):
+            n_done = 0
+            t0 = time.time()
+            while n_done < args.updates:
+                take = min(args.updates - n_done, len(batches))
+                state = trainer.fit(state, src(), resume=False,
+                                    max_updates=take)
+                n_done += take
+            jax.block_until_ready(state.params)
+            walls.append(time.time() - t0)
+        wall = min(walls)
+        rec = {"feed": label, "depth": depth, "updates": args.updates,
+               "io_ms": args.io_ms, "repeats": args.repeats,
+               "steps_per_sec": round(args.updates / wall, 2),
+               "wall_s": round(wall, 3),
+               "wall_s_all": [round(w, 3) for w in walls]}
+        print(f"  {label:9s} {rec['steps_per_sec']:7.2f} steps/s "
+              f"(best of {args.repeats}: {rec['wall_s_all']}, "
+              f"depth={depth})")
+        records.append(rec)
+    ratio = records[1]["steps_per_sec"] / max(records[0]["steps_per_sec"],
+                                              1e-9)
+    print(f"  prefetch/sync = {ratio:.2f}x")
+    return records, round(ratio, 3)
+
+
+def bench_generation(args, teacher_model, tcfg, batches, out_root):
+    from repro.core.teacher import TeacherRunner
+    tparams = teacher_model.init(jax.random.key(1))
+    records = []
+    for workers in (1, 2):
+        root = os.path.join(out_root, f"_gen_w{workers}")
+        store = LogitStoreV2(root, k=K, vocab=V)
+
+        # engines built and warmed up front: each worker pays its own
+        # forward compile in real deployments, but at tiny scale that
+        # compile would swamp the per-shard signal being measured
+        engines = {w: TeacherRunner(tcfg, tparams, k=K)
+                   for w in range(workers)}
+        for eng in engines.values():
+            eng.forward_topk(batches[0])
+        walls = []
+        for _ in range(args.repeats):        # repeat = a new wave (the
+            t0 = time.time()                 # supersede path, exercised)
+            rep = generate_sharded(
+                engines.__getitem__, batches, store, n_workers=workers,
+                ledger_path=os.path.join(root, "ledger.json"))
+            walls.append(time.time() - t0)
+        wall = min(walls)
+        store.verify()
+        rec = {"workers": workers, "n_shards": rep["n_shards"],
+               "final_wave": rep["wave"],
+               "shards_per_sec": round(rep["n_shards"] / wall, 2),
+               "wall_s": round(wall, 3),
+               "wall_s_all": [round(w, 3) for w in walls]}
+        print(f"  workers={workers}  {rec['shards_per_sec']:6.2f} shards/s "
+              f"(best of {args.repeats}: {rec['wall_s_all']})")
+        records.append(rec)
+    return records
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--updates", type=int, default=24)
+    ap.add_argument("--batches", type=int, default=24)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--hidden", type=int, default=32)
+    ap.add_argument("--repeats", type=int, default=4,
+                    help="feed timing repeats (best-of)")
+    ap.add_argument("--depth", type=int, default=3,
+                    help="prefetch queue depth")
+    ap.add_argument("--io-ms", type=float, default=-1.0,
+                    help="simulated remote-store fetch latency per shard "
+                         "(-1: auto-calibrate to the measured update "
+                         "cost, making the run decode-bound on any box)")
+    ap.add_argument("--lr", type=float, default=5e-2)
+    ap.add_argument("--min-speedup", type=float, default=1.3)
+    ap.add_argument("--out", default="experiments/benchmarks")
+    args = ap.parse_args(argv)
+
+    cfg = CONFIG.replace(
+        lstm_hidden=args.hidden, n_senones=V, vocab_size=V, feat_dim=48,
+        segments=(Segment((LayerSpec(mixer="lstm", ffn="none"),),
+                          repeat=1),))
+    tcfg = cfg.replace(
+        name="teacher",
+        segments=(Segment((LayerSpec(mixer="bilstm", ffn="none"),),
+                          repeat=1),))
+    model = build_model(cfg)
+    batches = _corpus(args.batches, args.batch, args.seq, cfg.feat_dim)
+
+    work = os.path.join(args.out, "_pipeline_bench")
+    if os.path.isdir(work):                  # fresh run, fresh workspace
+        import shutil
+        shutil.rmtree(work)
+    store = _fill_store(os.path.join(work, "store"), batches)
+
+    if args.io_ms < 0:
+        args.io_ms = calibrate_io_ms(args, model, cfg, batches, store)
+        print(f"auto-calibrated io to {args.io_ms}ms "
+              f"(~= measured update+decode cost)")
+    print(f"feed: {args.updates} updates over {args.batches} shards of "
+          f"{args.batch}x{args.seq}, io={args.io_ms}ms, "
+          f"depth={args.depth}")
+    feed_records, ratio = bench_feed(args, model, cfg, batches, store)
+    print("generation: sharded target generation")
+    gen_records = bench_generation(args, build_model(tcfg), tcfg,
+                                   batches, work)
+
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, "pipeline_bench.json")
+    with open(path, "w") as f:
+        json.dump({"config": vars(args),
+                   "feed": feed_records,
+                   "prefetch_speedup_x": ratio,
+                   "generation": gen_records}, f, indent=1)
+    print(f"wrote {path}")
+    assert ratio >= args.min_speedup, (
+        f"prefetching feed {ratio}x < required {args.min_speedup}x on a "
+        f"decode-bound run")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,12 @@ interleave every 5, chunked BPTT until 15, fine-tune 16-18), then executes
 the same *structure* scaled to minutes of synthetic audio with the BMUF
 trainer (the paper's 64-GPU arm), reporting per-sub-epoch relative FER
 reduction — the laptop twin of the paper's Figure 1.
+
+Data plane: target generation is partitioned across two ledgered
+workers into the manifest-backed LogitStore v2, and every Trainer.fit
+consumes its shards through the async prefetching feed — the same
+producer/consumer path a real million-hour run scales out on
+(repro.store + repro.pipeline).
 """
 import jax
 import jax.numpy as jnp
@@ -27,12 +33,16 @@ def main():
     pc = PipelineConfig(n_labeled=24, n_unlabeled=96, n_val=8,
                         epochs_baseline=2, n_sub_epochs=4,
                         labeled_every=2, chunked_until=3,
-                        bmuf_workers=4, bmuf_block_steps=2)
+                        bmuf_workers=4, bmuf_block_steps=2,
+                        gen_workers=2, prefetch=2)
     pipe = SSLPipeline(pc, out_dir="experiments/million_hour",
                        student_trainer="bmuf")
     base = pipe.stage_baseline()
     pipe.stage_teacher()
-    pipe.stage_targets()
+    targ = pipe.stage_targets()
+    print(f"targets: {targ['n_shards']} manifest shards from "
+          f"{targ['n_workers']} ledgered workers (wave {targ['wave']}), "
+          f"{targ['storage_compression_x']}x storage compression")
     stud = pipe.stage_student()
     print(f"baseline FER {base['val_fer']:.3f} -> "
           f"BMUF student FER {stud['val_fer']:.3f} "

@@ -9,6 +9,12 @@ pairs per frame, written by the teacher target-generation pass and read by
 the student trainer.  ``topk_compress`` / ``reconstruct`` are the in-memory
 codecs; ``repro.kernels.topk_logits`` is the Pallas TPU kernel for the
 selection hot loop.
+
+This module keeps the codecs, the storage math, and the **v1** store
+(one compressed npz per shard).  The production archive is
+``repro.store.LogitStoreV2`` — manifest-backed, memory-mapped,
+wave-versioned — which reads v1 archives in place via its migration
+path; new producers should write through ``repro.pipeline.generate``.
 """
 from __future__ import annotations
 
@@ -35,15 +41,55 @@ def topk_compress(logits, k: int):
     return vals.astype(jnp.bfloat16), idx.astype(jnp.int32)
 
 
-def reconstruct(vals, idx, vocab: int):
-    """Lossy reconstruction: missing logits filled with NEG_FILL."""
+def reconstruct(vals, idx, vocab: int, *, row_chunk: int = 0):
+    """Lossy reconstruction: missing logits filled with NEG_FILL.
+
+    With ``row_chunk`` > 0 the scatter streams over blocks of
+    ``row_chunk`` frames (``lax.map``), so the working set beyond the
+    output itself is bounded by one (row_chunk, vocab) block — the
+    unchunked path's vmapped functional scatter peaks at ~2x the full
+    (frames, vocab) canvas, which at a 262k token vocab is the
+    difference between fitting and OOM.  Loss paths should not call
+    this at all: ``distill.chunked_topk_distill_ce`` (and the
+    ``kernels/sparse_ce`` gather) consume top-k directly without ever
+    materializing the canvas.
+    """
+    k = vals.shape[-1]
     shape = vals.shape[:-1] + (vocab,)
-    canvas = jnp.full((int(np.prod(shape[:-1])), vocab), NEG_FILL,
-                      jnp.float32)
-    flat_v = vals.reshape(-1, vals.shape[-1]).astype(jnp.float32)
-    flat_i = idx.reshape(-1, idx.shape[-1])
-    canvas = jax.vmap(lambda c, i, v: c.at[i].set(v))(canvas, flat_i, flat_v)
+    n = int(np.prod(shape[:-1]))
+    flat_v = vals.reshape(n, k).astype(jnp.float32)
+    flat_i = idx.reshape(n, k)
+
+    def scatter_rows(v, i):
+        c = jnp.full((v.shape[0], vocab), NEG_FILL, jnp.float32)
+        return jax.vmap(lambda c_, i_, v_: c_.at[i_].set(v_))(c, i, v)
+
+    if row_chunk and n > row_chunk:
+        pad = (-n) % row_chunk
+        pv = jnp.pad(flat_v, ((0, pad), (0, 0)))
+        pi = jnp.pad(flat_i, ((0, pad), (0, 0)))
+        blocks = jax.lax.map(
+            lambda args: scatter_rows(*args),
+            (pv.reshape(-1, row_chunk, k), pi.reshape(-1, row_chunk, k)))
+        canvas = blocks.reshape(-1, vocab)[:n]
+    else:
+        canvas = scatter_rows(flat_v, flat_i)
     return canvas.reshape(shape)
+
+
+def iter_reconstruct(vals, idx, vocab: int, row_chunk: int = 1024):
+    """Host-side streaming reconstruction: yields (lo, hi, block) over
+    row blocks without ever allocating the full canvas — for consumers
+    (eval dumps, calibration sweeps) that scan frames once."""
+    k = vals.shape[-1]
+    flat_v = np.asarray(vals, np.float32).reshape(-1, k)
+    flat_i = np.asarray(idx).reshape(-1, k)
+    n = flat_v.shape[0]
+    for lo in range(0, n, row_chunk):
+        hi = min(lo + row_chunk, n)
+        block = np.full((hi - lo, vocab), NEG_FILL, np.float32)
+        np.put_along_axis(block, flat_i[lo:hi], flat_v[lo:hi], axis=-1)
+        yield lo, hi, block
 
 
 def storage_bytes_per_frame(k: int) -> int:
@@ -75,6 +121,13 @@ class LogitStore:
         self.k = k
         self.vocab = vocab
         os.makedirs(root, exist_ok=True)
+
+    def append_shard(self, shard_id: int, vals, idx, utt_lens=None, *,
+                     wave: int = 0):
+        """v2-API spelling so the pipeline layer is store-agnostic; v1
+        has no wave generations — the tag is accepted and dropped."""
+        del wave
+        return self.write_shard(shard_id, vals, idx, utt_lens)
 
     def write_shard(self, shard_id: int, vals, idx, utt_lens=None):
         vals = np.asarray(jax.device_get(vals), dtype=np.float32)

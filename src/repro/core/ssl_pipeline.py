@@ -4,7 +4,10 @@ Stages (paper sections in brackets):
   baseline : student-architecture LSTM AM, CE on labeled data [§2]
   teacher  : bidirectional LSTM AM, CE (+ sMBR) on labeled data [§3.2]
   targets  : teacher inference over the unlabeled firehose -> top-k=20
-             logits into the LogitStore [§3.2.2]
+             logits into the manifest-backed LogitStore v2, partitioned
+             across gen_workers ledgered shard ranges [§3.2.2];
+             resumable (work ledger) and wave-versioned (re-runs
+             supersede atomically)
   student  : scheduled learning over unlabeled sub-epochs with labeled
              interleaves [§3.3], GTC or BMUF trainer [§3.5]
   smbr     : sequence training on labeled data only [§3.4], under
@@ -16,8 +19,11 @@ loss fns, and a DataSource; the Trainer owns the jit (one executable
 per loss kind x batch shape, lr traced), periodic TrainState
 checkpoints under <out>/ckpt_<stage>/state (killed stages resume
 mid-stream; completed stages retire their resume state), and the
-metrics sink.  Final params land in <out>/ckpt_<stage> — the
-cross-stage interface.
+metrics sink.  Batches reach the jitted update through the async
+prefetching feed (repro.pipeline.PrefetchingSource, depth
+PipelineConfig.prefetch) so host-side shard decode overlaps device
+compute.  Final params land in <out>/ckpt_<stage> — the cross-stage
+interface.
 
 Metrics include the frame-error-rate (FER) on a held-out synthetic VAL
 set and the relative FER reduction vs the baseline — the
@@ -37,8 +43,9 @@ from repro.checkpoint import CheckpointStore
 from repro.configs.lstm_am_7khr import CONFIG as AM_CONFIG
 from repro.configs.base import LayerSpec, Segment
 from repro.core import scheduled
-from repro.core.logit_store import LogitStore
 from repro.core.teacher import TeacherRunner
+from repro.pipeline import generate_sharded
+from repro.store import LogitStoreV2
 from repro.data import FeatureConfig, SynthConfig
 from repro.data.loader import CorpusLoader
 from repro.distributed.bmuf import BMUFConfig
@@ -72,6 +79,11 @@ class PipelineConfig:
     lr: float = 5e-2
     topk: int = 10
     ckpt_every: int = 20              # TrainState resume-ckpt cadence
+    # data plane
+    gen_workers: int = 2              # target-generation workers (ledgered
+                                      # disjoint shard ranges, engine each)
+    prefetch: int = 2                 # async feed depth for Trainer.fit
+                                      # (0 = synchronous)
     # schedule (paper-structured, scaled)
     n_sub_epochs: int = 4
     labeled_every: int = 2
@@ -171,7 +183,8 @@ class SSLPipeline:
         store = CheckpointStore(
             os.path.join(self.out, f"ckpt_{stage}", "state"))
         return Trainer(strategy, loss_fns, checkpoint=store,
-                       ckpt_every=self.pc.ckpt_every, metrics=sink)
+                       ckpt_every=self.pc.ckpt_every, metrics=sink,
+                       prefetch=self.pc.prefetch)
 
     def _load_or_none(self, stage, cfg):
         store = self._ckpt(stage)
@@ -258,20 +271,36 @@ class SSLPipeline:
                                        self.pc.n_senones)
 
     def stage_targets(self) -> Dict:
+        """Sharded generation through the data plane: the unlabeled
+        corpus is partitioned across ``gen_workers`` ledgered shard
+        ranges, one TeacherRunner (engine) per worker, into the
+        manifest-backed LogitStore v2 — a killed run re-claims its
+        unfinished ranges, a completed re-run supersedes the previous
+        wave atomically."""
         pc = self.pc
         tparams = self._load_or_none("teacher", self.teacher_cfg)
         assert tparams is not None, "run stage teacher first"
-        runner = TeacherRunner(self.teacher_cfg, tparams, k=pc.topk)
-        store = LogitStore(os.path.join(self.out, "logit_store"),
-                           k=pc.topk, vocab=pc.n_senones)
-        batches = self._batches(self.rng_unlabeled, chunked=True, seed=7)
-        paths = runner.generate_to_store(
-            store, ({"feats": jnp.asarray(b["feats"]),
-                     "mask": jnp.asarray(b["mask"])} for b in batches))
+        store = LogitStoreV2(os.path.join(self.out, "logit_store"),
+                             k=pc.topk, vocab=pc.n_senones)
+        # host (numpy) batches: the jitted forward converts one batch at
+        # a time, so device memory stays O(1 batch) over the whole corpus
+        batches = [{"feats": b["feats"], "mask": b["mask"]}
+                   for b in self._batches(self.rng_unlabeled, chunked=True,
+                                          seed=7)]
+
+        def make_engine(worker: int):
+            return TeacherRunner(self.teacher_cfg, tparams, k=pc.topk)
+
+        report = generate_sharded(
+            make_engine, batches, store, n_workers=pc.gen_workers,
+            ledger_path=os.path.join(self.out, "gen_ledger.json"))
+        store.verify()                    # manifest-checksum every shard
         meta = store.stats()
         full = meta.n_frames * pc.n_senones * 4
         packed = meta.n_frames * (pc.topk * 6)
-        return {"n_shards": len(paths), "n_frames": meta.n_frames,
+        return {"n_shards": report["n_shards"], "n_frames": meta.n_frames,
+                "n_workers": report["n_workers"], "wave": report["wave"],
+                "resumed": report["resumed"],
                 "storage_compression_x": round(full / packed, 1)}
 
     def _student_strategy(self):
@@ -287,10 +316,13 @@ class SSLPipeline:
         pc = self.pc
         baseline = self._load_or_none("baseline", self.student_cfg)
         assert baseline is not None, "run stage baseline first"
-        store = LogitStore(os.path.join(self.out, "logit_store"),
-                           k=pc.topk, vocab=pc.n_senones)
+        # the workers=1 consumer of whatever N workers generated: the
+        # manifest is the contract — verify() checksums every live shard
+        store = LogitStoreV2(os.path.join(self.out, "logit_store"),
+                             k=pc.topk, vocab=pc.n_senones)
         unl_batches = self._batches(self.rng_unlabeled, chunked=True, seed=7)
         assert len(store.shards()) == len(unl_batches), "regenerate targets"
+        store.verify()
         per_sub = max(1, len(unl_batches) // pc.n_sub_epochs)
         sched = scheduled.ScheduleConfig(
             n_sub_epochs=pc.n_sub_epochs, sub_epoch_hours=1.0,

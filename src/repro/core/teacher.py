@@ -6,27 +6,31 @@ LogitStore.  Generation is embarrassingly parallel over workers — exactly
 the property the paper engineered for ("parallelize target generation"):
 no decoder, no confidence model, no LM.
 
-All decode loops live in ``repro.serve.StreamingEngine``; this module is
-the thin target-generation consumer: pre-formed dict batches go through
-``engine.forward_topk`` (the trainer's chunked batches), and the raw
-utterance firehose goes through the engine's bucketed queue
-(``generate_corpus_to_store``) — the paper's batch-inference-as-a-service
-framing.
+All decode loops live in ``repro.serve.StreamingEngine`` and all
+multi-worker partitioning / ledger bookkeeping in
+``repro.pipeline.generate``; ``TeacherRunner`` is the thin
+*single-worker special case*: pre-formed dict batches go through
+``engine.forward_topk`` (the trainer's chunked batches), the raw
+utterance firehose through ``pipeline.generate_corpus`` over the
+engine's bucketed queue.  Cross-worker sharded generation is
+``pipeline.generate_sharded`` with one TeacherRunner per worker —
+see ``core.ssl_pipeline.stage_targets``.
 """
 from __future__ import annotations
 
-from repro.core import logit_store as ls
-from repro.serve import THROUGHPUT, BatchPolicy, StreamingEngine
+from repro.pipeline.generate import generate_corpus
 
 
 class TeacherRunner:
     def __init__(self, cfg, params, *, k: int = 20, temperature: float = 1.0,
-                 policy: BatchPolicy = THROUGHPUT, topk_impl: str = "lax"):
+                 policy=None, topk_impl: str = "lax"):
+        from repro.serve import THROUGHPUT, StreamingEngine
         self.cfg = cfg
         self.k = k
         self.temperature = temperature
         self.engine = StreamingEngine(cfg, params, k=k,
-                                      temperature=temperature, policy=policy,
+                                      temperature=temperature,
+                                      policy=policy or THROUGHPUT,
                                       topk_impl=topk_impl)
         self.model = self.engine.model
         self.params = params
@@ -35,60 +39,34 @@ class TeacherRunner:
         """One pre-formed batch -> (vals (B,S,k) bf16, idx (B,S,k) int32)."""
         return self.engine.forward_topk(batch)
 
-    def generate_to_store(self, store: ls.LogitStore, batches,
-                          shard_offset: int = 0):
+    # the spelling pipeline.generate duck-types on (engine-or-runner)
+    forward_topk = generate
+
+    def generate_to_store(self, store, batches, shard_offset: int = 0,
+                          store_wave: int = 0):
         """Pre-formed dict batches -> one store shard each (trainer-aligned
         shard layout: shard i holds batch i's frames)."""
         paths = []
         for i, batch in enumerate(batches):
             vals, idx = self.generate(batch)
-            paths.append(store.write_shard(shard_offset + i, vals, idx))
+            paths.append(store.append_shard(shard_offset + i, vals, idx,
+                                            wave=store_wave))
         return paths
 
-    def generate_corpus_to_store(self, store: ls.LogitStore, utterances,
-                                 shard_offset: int = 0,
-                                 wave: int = 0):
-        """The firehose path: raw (T, F) utterances -> bucketed batched
+    def generate_corpus_to_store(self, store, utterances,
+                                 shard_offset: int = 0, wave: int = 0,
+                                 store_wave: int = 0):
+        """The firehose path — ``pipeline.generate_corpus`` with this
+        runner's engine: raw (T, F) utterances -> bucketed batched
         inference -> one shard per utterance, numbered in submission
-        order.  Returns the shard paths (submission order).
-
-        ``utterances`` may be any iterable (including a generator — the
-        1M-hour firehose is streamed, never materialized): work proceeds
-        in waves of ``wave`` utterances (default: one policy batch), each
-        wave's shards flushed to disk before the next is read, so host
-        memory on both the input and output side stays bounded by one
-        wave.
-
-        Failure contract: if a wave's forward or a shard write raises,
-        retry by re-running the *whole call* with the same corpus and
-        shard_offset — shard contents are deterministic, so rewriting
-        already-written shards is idempotent.  Each call is
-        self-contained: stale work left queued by a failed call is
-        discarded up front (its ordinals belong to that call's
-        numbering).
+        order.  ``wave`` is the flush granularity (utterances per
+        memory-bounded drain, default one policy batch); ``store_wave``
+        the LogitStore generation tag.  Failure contract and streaming
+        semantics are documented on ``generate_corpus``.
         """
-        wave = wave or self.engine.policy.max_batch
-        self.engine.queue.discard_pending()
-        self.engine.queue.pop_completed()
-        it = iter(utterances)
-        paths = {}
-        j = 0
-        while True:
-            submitted = 0
-            for u in it:
-                self.engine.submit(u, meta={"ordinal": j})
-                j += 1
-                submitted += 1
-                if submitted == wave:
-                    break
-            if not submitted:
-                break
-            for r in self.engine.run().values():
-                o = r.meta["ordinal"]
-                paths[o] = store.write_shard(
-                    shard_offset + o, r.vals[None], r.idx[None],
-                    utt_lens=[r.vals.shape[0]])
-        return [paths[o] for o in sorted(paths)]
+        return generate_corpus(self.engine, store, utterances,
+                               shard_offset=shard_offset, wave_size=wave,
+                               store_wave=store_wave)
 
 
 def make_teacher_config(student_cfg):

@@ -76,27 +76,56 @@ def block_sync(state, cfg: BMUFConfig, *, mean_fn=None):
     return {"theta_g": theta_g, "delta": delta, "workers": workers}
 
 
+def _make_local_tau(train_step: Callable, lr, rng):
+    """tau local steps for one worker, scanned; ``rng`` (when given) is
+    that worker's block key, folded per tau index so every microbatch
+    in the block sees a distinct stream."""
+    from repro.utils.introspect import takes_rng as _takes
+    takes_rng = _takes(train_step)
+
+    def local_tau(params, opt_state, bt, wkey):
+        def one(carry, xs):
+            p, o = carry
+            b, ti = xs
+            if takes_rng and wkey is not None:
+                p, o, m = train_step(p, o, b, lr,
+                                     rng=jax.random.fold_in(wkey, ti))
+            else:
+                p, o, m = train_step(p, o, b, lr)
+            return (p, o), m
+
+        tau = jax.tree_util.tree_leaves(bt)[0].shape[0]
+        (params, opt_state), ms = jax.lax.scan(
+            one, (params, opt_state), (bt, jnp.arange(tau)))
+        return params, opt_state, ms
+
+    if rng is None:
+        return lambda p, o, bt: local_tau(p, o, bt, None)
+    return local_tau
+
+
 def make_bmuf_block_step(train_step: Callable, cfg: BMUFConfig):
     """One *block*: tau vmapped local steps + the sync, jittable.
 
-    train_step(params, opt_state, batch, lr) -> (params, opt_state,
-    metrics) with lr a traced scalar — one compile serves every
-    LR-schedule phase.  batches: pytree with leading dims (tau, W, ...).
+    train_step(params, opt_state, batch, lr[, rng]) -> (params,
+    opt_state, metrics) with lr a traced scalar — one compile serves
+    every LR-schedule phase.  batches: pytree with leading dims
+    (tau, W, ...).  ``rng`` (optional trailing argument of the returned
+    block) is a per-block key folded per (worker, tau-step) and threaded
+    into steps that declare it — legacy 4-argument calls are unchanged.
     """
-    def block(state, opt_states, batches, lr):
-        def local_tau(params, opt_state, bt):
-            def one(carry, b):
-                p, o = carry
-                p, o, m = train_step(p, o, b, lr)
-                return (p, o), m
-            (params, opt_state), ms = jax.lax.scan(one, (params, opt_state),
-                                                   bt)
-            return params, opt_state, ms
-
-        # vmap over workers; scan over tau inside
-        workers, opt_states, metrics = jax.vmap(
-            local_tau, in_axes=(0, 0, 1))(state["workers"], opt_states,
-                                          batches)
+    def block(state, opt_states, batches, lr, rng=None):
+        local_tau = _make_local_tau(train_step, lr, rng)
+        if rng is None:
+            workers, opt_states, metrics = jax.vmap(
+                local_tau, in_axes=(0, 0, 1))(state["workers"], opt_states,
+                                              batches)
+        else:
+            wkeys = jax.vmap(lambda i: jax.random.fold_in(rng, i))(
+                jnp.arange(cfg.n_workers))
+            workers, opt_states, metrics = jax.vmap(
+                local_tau, in_axes=(0, 0, 1, 0))(state["workers"],
+                                                 opt_states, batches, wkeys)
         state = dict(state, workers=workers)
         state = block_sync(state, cfg)
         return state, opt_states, metrics
@@ -121,19 +150,36 @@ def make_sharded_bmuf_block_step(train_step: Callable, cfg: BMUFConfig,
 
     ax = worker_axes if len(worker_axes) > 1 else worker_axes[0]
 
-    def block(state, opt_states, batches, lr):
-        def shard_body(workers, opt_states, batches, lr, theta_g, delta):
-            def local_tau(params, opt_state, bt):
-                def one(carry, b):
+    from repro.utils.introspect import takes_rng as _takes
+    takes_rng = _takes(train_step)
+
+    def block(state, opt_states, batches, lr, rng=None):
+        def shard_body(workers, opt_states, batches, lr, theta_g, delta,
+                       wkey_data):
+            def local_tau(params, opt_state, bt, wkd):
+                def one(carry, xs):
                     p, o = carry
-                    p, o, m = train_step(p, o, b, lr)
+                    b, ti = xs
+                    if takes_rng and wkd is not None:
+                        k = jax.random.fold_in(
+                            jax.random.wrap_key_data(wkd), ti)
+                        p, o, m = train_step(p, o, b, lr, rng=k)
+                    else:
+                        p, o, m = train_step(p, o, b, lr)
                     return (p, o), m
+                tau = jax.tree_util.tree_leaves(bt)[0].shape[0]
                 (params, opt_state), ms = jax.lax.scan(
-                    one, (params, opt_state), bt)
+                    one, (params, opt_state), (bt, jnp.arange(tau)))
                 return params, opt_state, ms
 
-            workers, opt_states, metrics = jax.vmap(
-                local_tau, in_axes=(0, 0, 1))(workers, opt_states, batches)
+            if wkey_data is None:
+                workers, opt_states, metrics = jax.vmap(
+                    lambda p, o, bt: local_tau(p, o, bt, None),
+                    in_axes=(0, 0, 1))(workers, opt_states, batches)
+            else:
+                workers, opt_states, metrics = jax.vmap(
+                    local_tau, in_axes=(0, 0, 1, 0))(
+                        workers, opt_states, batches, wkey_data)
             # block sync: mean over the local W slice, then over the axis
             def wmean(w):
                 local = jnp.mean(w.astype(jnp.float32), axis=0)
@@ -158,15 +204,36 @@ def make_sharded_bmuf_block_step(train_step: Callable, cfg: BMUFConfig,
 
         wspec = P(ax)       # leading worker dim sharded
         rspec = P()         # theta_g / delta / lr replicated
-        fn = shard_map(
-            shard_body, mesh=mesh,
-            in_specs=(wspec, wspec, P(None, ax), rspec, rspec, rspec),
-            out_specs=(wspec, wspec, P(None, ax), rspec, rspec),
-            check_rep=False)
-        workers, opt_states, metrics, theta_g, delta = fn(
-            state["workers"], opt_states, batches,
-            jnp.asarray(lr, jnp.float32), state["theta_g"],
-            state["delta"])
+        if rng is None:
+            fn = shard_map(
+                lambda w, o, b, l, tg, d: shard_body(w, o, b, l, tg, d,
+                                                     None),
+                mesh=mesh,
+                in_specs=(wspec, wspec, P(None, ax), rspec, rspec, rspec),
+                out_specs=(wspec, wspec, P(None, ax), rspec, rspec),
+                check_rep=False)
+            workers, opt_states, metrics, theta_g, delta = fn(
+                state["workers"], opt_states, batches,
+                jnp.asarray(lr, jnp.float32), state["theta_g"],
+                state["delta"])
+        else:
+            # per-worker keys are folded OUTSIDE shard_map with the
+            # *global* worker index, so the sharded path stays bitwise
+            # equal to the vmap path; raw key data crosses the shard_map
+            # boundary (uint32 — extended key dtypes and sharding specs
+            # don't mix on every jax version) and is re-wrapped inside
+            wkd = jax.vmap(lambda i: jax.random.key_data(
+                jax.random.fold_in(rng, i)))(jnp.arange(cfg.n_workers))
+            fn = shard_map(
+                shard_body, mesh=mesh,
+                in_specs=(wspec, wspec, P(None, ax), rspec, rspec, rspec,
+                          wspec),
+                out_specs=(wspec, wspec, P(None, ax), rspec, rspec),
+                check_rep=False)
+            workers, opt_states, metrics, theta_g, delta = fn(
+                state["workers"], opt_states, batches,
+                jnp.asarray(lr, jnp.float32), state["theta_g"],
+                state["delta"], wkd)
         return ({"theta_g": theta_g, "delta": delta, "workers": workers},
                 opt_states, metrics)
 

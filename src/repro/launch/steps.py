@@ -29,7 +29,12 @@ def model_forward(model, cfg, params, batch):
 
 
 def make_loss_fn(model, cfg, loss_kind: str, *, vocab_chunk: int = 8192):
-    def loss_fn(params, batch):
+    # the trailing ``rng`` opts into the Trainer's per-update key folding
+    # (repro.train.strategies): today's forwards are deterministic so the
+    # key is unused (and DCE'd), but any stochastic regularizer added to
+    # a model family picks it up without touching the step plumbing
+    def loss_fn(params, batch, rng=None):
+        del rng
         h, aux = model_forward(model, cfg, params, batch)
         w = model.unembed_matrix(params)
         cap = cfg.logit_softcap

@@ -62,6 +62,12 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="LLM-arch reduced-config smoke run")
     ap.add_argument("--steps", type=int, default=4)
+    ap.add_argument("--gen-workers", type=int, default=None,
+                    help="target-generation workers (ledgered disjoint "
+                         "shard ranges; default: PipelineConfig's 2)")
+    ap.add_argument("--prefetch", type=int, default=None,
+                    help="async feed depth for Trainer.fit "
+                         "(0 = synchronous; default: PipelineConfig's 2)")
     ap.add_argument("--out", default="experiments/train")
     args = ap.parse_args(argv)
 
@@ -74,6 +80,10 @@ def main(argv=None):
     from repro.core.ssl_pipeline import PipelineConfig, SSLPipeline
     scale = {"tiny": PipelineConfig.tiny(), "small": PipelineConfig.small()}[
         args.scale]
+    if args.gen_workers is not None:
+        scale.gen_workers = args.gen_workers
+    if args.prefetch is not None:
+        scale.prefetch = args.prefetch
     pipe = SSLPipeline(scale, out_dir=args.out,
                        student_trainer=args.trainer)
     t0 = time.time()

@@ -1,6 +1,8 @@
 from repro.optim.sgd import (adam_init, adam_update, clip_by_global_norm,
                              momentum_init, momentum_update)
-from repro.optim.schedules import exponential_decay, warmup_exponential
+from repro.optim.schedules import (Schedule, exponential_decay,
+                                   warmup_exponential)
 
 __all__ = ["momentum_init", "momentum_update", "adam_init", "adam_update",
-           "clip_by_global_norm", "exponential_decay", "warmup_exponential"]
+           "clip_by_global_norm", "Schedule", "exponential_decay",
+           "warmup_exponential"]

@@ -1,22 +1,59 @@
-"""LR schedules. The paper uses exponential decay over (sub-)epochs."""
+"""LR schedules. The paper uses exponential decay over (sub-)epochs.
+
+A ``Schedule`` is a per-*update* learning-rate policy: callable
+``step -> lr`` plus a marker type the data plane recognizes.  Sources
+(``repro.train.data``) pass Schedule objects through ``TrainBatch.lr``
+untouched, and ``Trainer.fit`` evaluates them at the update counter on
+the host, feeding the result through the jitted update's *traced* lr
+argument — so a schedule sweeping a thousand values still compiles one
+executable per (loss kind, batch shape) (pinned in tests/test_trainer.py).
+
+Plain callables keep their legacy meaning in ``epoch_source`` (a
+function of the *epoch*); only Schedule instances get per-step
+treatment.
+"""
 from __future__ import annotations
+
+from typing import Callable
 
 import jax.numpy as jnp
 
 
-def exponential_decay(lr0: float, decay: float, steps_per_epoch: int):
+class Schedule:
+    """A per-update LR policy: ``schedule(step) -> float``.
+
+    ``fn`` maps the 0-based optimizer-update counter to a learning
+    rate; evaluation happens on the host (Trainer.fit), so returning
+    jnp scalars is fine — they are cast to float.
+    """
+
+    def __init__(self, fn: Callable[[int], float], desc: str = ""):
+        self._fn = fn
+        self.desc = desc
+
+    def __call__(self, step: int) -> float:
+        return float(self._fn(step))
+
+    def __repr__(self) -> str:
+        return f"Schedule({self.desc or self._fn!r})"
+
+
+def exponential_decay(lr0: float, decay: float,
+                      steps_per_epoch: int) -> Schedule:
     def fn(step):
         epoch = step // steps_per_epoch
         return lr0 * (decay ** epoch.astype(jnp.float32)
                       if hasattr(epoch, "astype") else decay ** epoch)
-    return fn
+    return Schedule(fn, f"exp(lr0={lr0}, decay={decay}, "
+                        f"spe={steps_per_epoch})")
 
 
 def warmup_exponential(lr0: float, warmup_steps: int, decay: float,
-                       steps_per_epoch: int):
+                       steps_per_epoch: int) -> Schedule:
     def fn(step):
         s = jnp.asarray(step, jnp.float32)
         warm = jnp.minimum(1.0, (s + 1) / max(warmup_steps, 1))
         epoch = jnp.floor(s / steps_per_epoch)
         return lr0 * warm * (decay ** epoch)
-    return fn
+    return Schedule(fn, f"warmup_exp(lr0={lr0}, warmup={warmup_steps}, "
+                        f"decay={decay}, spe={steps_per_epoch})")

@@ -1,0 +1,21 @@
+"""The pipeline half of the million-hour data plane.
+
+Producers: ``generate`` partitions target generation across N workers
+(engine per worker, disjoint manifest shard ranges, resumable work
+ledger) — the paper's "parallelize target generation" made a first-class
+subsystem over ``repro.store``.
+
+Consumers: ``PrefetchingSource`` turns any DataSource into an async
+double-buffered host->device feed for ``Trainer.fit`` (decode ahead on
+a thread, ``jax.device_put`` staged, order-preserving).
+"""
+from repro.pipeline.generate import (WorkLedger, WorkRange,
+                                     generate_corpus, generate_sharded,
+                                     shard_ranges)
+from repro.pipeline.prefetch import PrefetchingSource
+
+__all__ = [
+    "WorkLedger", "WorkRange", "shard_ranges",
+    "generate_sharded", "generate_corpus",
+    "PrefetchingSource",
+]

@@ -1,0 +1,266 @@
+"""Sharded teacher target generation (paper §3.2: "parallelize target
+generation").
+
+The corpus is partitioned into contiguous shard ranges, one range claim
+at a time: each worker runs its own ``StreamingEngine`` (an engine per
+mesh slice or process) and writes its claimed range's shards into the
+manifest — ranges are disjoint, so workers never contend on a shard id,
+and the store's per-shard commit keeps the manifest consistent no
+matter the interleaving.
+
+Progress is tracked in a resumable **work ledger** (JSON next to the
+store): a range is pending -> claimed -> done, the file is rewritten
+atomically on every transition, and claims left behind by a killed
+worker demote back to pending when the ledger is reopened — a fresh
+invocation re-claims exactly the unfinished ranges.  Shard contents are
+deterministic, so re-running a half-finished range rewrites its shards
+idempotently.
+
+At laptop scale the "workers" run round-robin inside one process; the
+claim/ledger protocol is identical to what N real processes against a
+shared filesystem would execute.  ``TeacherRunner.generate_to_store``
+and ``generate_corpus_to_store`` (repro.core.teacher) are thin
+single-worker special cases of the helpers here.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def shard_ranges(n_items: int, n_workers: int) -> List[Tuple[int, int]]:
+    """Partition [0, n_items) into n_workers contiguous [lo, hi) ranges
+    (the first ``n_items % n_workers`` ranges get the extra item)."""
+    if n_workers < 1:
+        raise ValueError(f"n_workers must be >= 1, got {n_workers}")
+    base, extra = divmod(n_items, n_workers)
+    ranges, lo = [], 0
+    for w in range(n_workers):
+        hi = lo + base + (1 if w < extra else 0)
+        if hi > lo:
+            ranges.append((lo, hi))
+        lo = hi
+    return ranges
+
+
+@dataclass
+class WorkRange:
+    lo: int
+    hi: int
+    status: str = "pending"          # pending | claimed | done
+    owner: Optional[str] = None
+
+
+class WorkLedger:
+    """Resumable range ledger with atomic on-disk transitions.
+
+    ``open`` on an existing file demotes stale "claimed" entries back to
+    "pending" — any claim in a freshly-loaded ledger belongs to a dead
+    worker by definition (live claims exist only in the process that
+    made them).  "done" survives reopen: that is the resume contract.
+    """
+
+    def __init__(self, path: str, ranges: List[WorkRange], *, wave: int = 0):
+        self.path = path
+        self.ranges = ranges
+        self.wave = wave
+
+    # ------------------------------------------------------------ open/io
+
+    @classmethod
+    def open(cls, path: str, ranges: Sequence[Tuple[int, int]], *,
+             wave: int = 0) -> "WorkLedger":
+        if os.path.exists(path):
+            with open(path) as f:
+                d = json.load(f)
+            stored = [(r["lo"], r["hi"]) for r in d["ranges"]]
+            if stored != [tuple(r) for r in ranges]:
+                raise ValueError(
+                    f"ledger {path} partitions {stored}, caller wants "
+                    f"{list(ranges)} — delete the ledger to repartition")
+            led = cls(path, [WorkRange(r["lo"], r["hi"],
+                                       "pending" if r["status"] == "claimed"
+                                       else r["status"], None)
+                             for r in d["ranges"]],
+                      wave=int(d.get("wave", wave)))
+        else:
+            led = cls(path, [WorkRange(lo, hi) for lo, hi in ranges],
+                      wave=wave)
+        led._save()
+        return led
+
+    @classmethod
+    def fresh(cls, path: str, ranges: Sequence[Tuple[int, int]], *,
+              wave: int = 0) -> "WorkLedger":
+        """Start over (new generation wave): forget any previous ledger."""
+        if os.path.exists(path):
+            os.remove(path)
+        return cls.open(path, ranges, wave=wave)
+
+    def _save(self):
+        payload = {"wave": self.wave,
+                   "ranges": [{"lo": r.lo, "hi": r.hi, "status": r.status,
+                               "owner": r.owner} for r in self.ranges]}
+        tmp = self.path + ".tmp"
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())    # the crash-resume record must itself
+        os.replace(tmp, self.path)  # survive a crash (as manifest.save)
+
+    @classmethod
+    def peek_all_done(cls, path: str) -> bool:
+        """Is the ledger at `path` a *completed* pass?  False for a
+        missing or unreadable file — used to decide fresh-vs-resume
+        before the partition check (a completed pass may be freshly
+        repartitioned; an unfinished one must keep its ranges)."""
+        try:
+            with open(path) as f:
+                d = json.load(f)
+            return bool(d["ranges"]) and all(
+                r["status"] == "done" for r in d["ranges"])
+        except (OSError, ValueError, KeyError):
+            return False
+
+    # ------------------------------------------------------- transitions
+
+    def claim(self, owner: str) -> Optional[WorkRange]:
+        """Claim the next pending range for `owner` (None when none left).
+        Committed to disk before returning, so a worker killed mid-range
+        leaves a visible "claimed" entry for the next run to demote."""
+        for r in self.ranges:
+            if r.status == "pending":
+                r.status, r.owner = "claimed", owner
+                self._save()
+                return r
+        return None
+
+    def mark_done(self, rng: WorkRange):
+        rng.status, rng.owner = "done", None
+        self._save()
+
+    # ------------------------------------------------------------ queries
+
+    @property
+    def all_done(self) -> bool:
+        return all(r.status == "done" for r in self.ranges)
+
+    @property
+    def n_done(self) -> int:
+        return sum(r.status == "done" for r in self.ranges)
+
+
+# --------------------------------------------------------------- drivers
+
+def _utt_lens_of(batch) -> Optional[np.ndarray]:
+    mask = batch.get("mask") if isinstance(batch, dict) else None
+    if mask is None:
+        return None
+    return np.asarray(mask).sum(axis=-1).astype(np.int32)
+
+
+def generate_sharded(make_engine: Callable[[int], object],
+                     batches: Sequence[dict], store, *,
+                     n_workers: int = 1, ledger_path: Optional[str] = None,
+                     wave: Optional[int] = None) -> Dict:
+    """Pre-formed dict batches -> manifest shards, partitioned over workers.
+
+    make_engine(worker_id) -> an object with ``forward_topk(batch)``
+    (a StreamingEngine or TeacherRunner); engines are created lazily,
+    one per worker that actually claims work.  Shard i holds batch i's
+    frames — the trainer-aligned layout ``distill_shard_source`` reads.
+
+    Wave selection: a ledger with unfinished ranges is a killed run —
+    resume it at its recorded wave.  Otherwise (no ledger, or a
+    completed one) this is a fresh generation pass and (unless ``wave``
+    is forced) it supersedes the store's live shards at
+    ``store.next_wave()`` — so a deleted ledger, a different
+    ledger_path, or a completed re-run all start above the live wave
+    instead of tripping the store's stale-wave rejection.
+    """
+    ledger_path = ledger_path or os.path.join(store.root, "gen_ledger.json")
+    ranges = shard_ranges(len(batches), n_workers)
+    fresh_wave = store.next_wave() if wave is None else wave
+    if not os.path.exists(ledger_path):       # brand-new pass
+        ledger = WorkLedger.open(ledger_path, ranges, wave=fresh_wave)
+    elif WorkLedger.peek_all_done(ledger_path):
+        # completed pass: a new wave, freely repartitionable (the old
+        # partition is history — only an *unfinished* ledger pins ranges)
+        ledger = WorkLedger.fresh(ledger_path, ranges, wave=fresh_wave)
+    else:
+        ledger = WorkLedger.open(ledger_path, ranges)
+    resumed = ledger.n_done > 0
+    engines: Dict[int, object] = {}
+    n_written = 0
+    worker = 0
+    while True:
+        claim = ledger.claim(f"worker{worker}")
+        if claim is None:
+            break
+        if worker not in engines:
+            engines[worker] = make_engine(worker)
+        eng = engines[worker]
+        for i in range(claim.lo, claim.hi):
+            vals, idx = eng.forward_topk(batches[i])
+            store.append_shard(i, vals, idx, _utt_lens_of(batches[i]),
+                               wave=ledger.wave)
+            n_written += 1
+        ledger.mark_done(claim)
+        worker = (worker + 1) % n_workers
+    assert ledger.all_done
+    return {"n_shards": len(batches), "n_written": n_written,
+            "n_workers": n_workers, "wave": ledger.wave,
+            "resumed": resumed}
+
+
+def generate_corpus(engine, store, utterances, *, shard_offset: int = 0,
+                    wave_size: int = 0, store_wave: int = 0) -> List[str]:
+    """The firehose path: raw (T, F) utterances -> bucketed batched
+    inference -> one shard per utterance, numbered in submission order.
+    Returns the shard paths (submission order).
+
+    ``wave_size`` is the flush granularity (utterances per
+    memory-bounded drain); ``store_wave`` the LogitStore generation tag
+    — deliberately distinct names, because TeacherRunner's legacy
+    ``wave`` argument means the former.
+
+    ``utterances`` may be any iterable (including a generator — the
+    1M-hour firehose is streamed, never materialized): work proceeds in
+    waves of ``wave_size`` utterances (default: one policy batch), each
+    wave's shards flushed to disk before the next is read, so host
+    memory on both the input and output side stays bounded by one wave.
+
+    Failure contract: if a wave's forward or a shard write raises, retry
+    by re-running the *whole call* with the same corpus and
+    shard_offset — shard contents are deterministic, so rewriting
+    already-written shards is idempotent.  Each call is self-contained:
+    stale work left queued by a failed call is discarded up front (its
+    ordinals belong to that call's numbering).
+    """
+    wave_size = wave_size or engine.policy.max_batch
+    engine.queue.discard_pending()
+    engine.queue.pop_completed()
+    it = iter(utterances)
+    paths = {}
+    j = 0
+    while True:
+        submitted = 0
+        for u in it:
+            engine.submit(u, meta={"ordinal": j})
+            j += 1
+            submitted += 1
+            if submitted == wave_size:
+                break
+        if not submitted:
+            break
+        for r in engine.run().values():
+            o = r.meta["ordinal"]
+            paths[o] = store.append_shard(
+                shard_offset + o, r.vals[None], r.idx[None],
+                utt_lens=[r.vals.shape[0]], wave=store_wave)
+    return [paths[o] for o in sorted(paths)]

@@ -1,0 +1,138 @@
+"""Async prefetching feed: decode ahead on a host thread, stage on device.
+
+``PrefetchingSource`` wraps any DataSource (iterable of TrainBatch) so
+that while the jitted update consumes batch *n*, a background thread is
+already decoding batch *n+1..n+depth* (shard mmap/decompress, feature
+assembly, checksum verification — whatever the wrapped source does) and
+issuing its ``jax.device_put``.  JAX transfers are async, so with
+depth >= 2 this is host->device double-buffering: the update never
+blocks on host-side shard decode, and the H2D copy of the next batch
+overlaps the current step's compute.
+
+Determinism: one producer thread + one FIFO bounded queue — the wrapped
+source's order is preserved exactly, so training through a prefetching
+source is bitwise-identical to the synchronous feed (pinned by
+tests/test_pipeline.py).  ``lr`` and ``loss`` ride through untouched
+(Schedule objects included); only ``data`` is staged.
+
+Lifecycle: each ``iter()`` spawns a fresh daemon producer; consumers
+that stop early (Trainer.fit's ``max_updates``) call ``close()`` (the
+Trainer does) or rely on the stop flag + daemon status — the producer
+never blocks process exit.  A producer exception is re-raised at the
+consumer's next ``__next__``, not swallowed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterable, Iterator, Optional
+
+import jax
+
+# NOTE: no repro.train import here — repro.train re-exports this module,
+# and the TrainBatch dataclass is handled structurally (dataclasses.replace)
+
+_DONE = object()
+
+
+class _Failure:
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
+class _PrefetchIterator(Iterator):
+    def __init__(self, source: Iterable, depth: int,
+                 device_put: bool, skip_put: int = 0):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._device_put = device_put
+        self._skip_put = skip_put
+        self._thread = threading.Thread(
+            target=self._produce, args=(iter(source),),
+            name="prefetch-producer", daemon=True)
+        self._thread.start()
+
+    def _produce(self, it):
+        try:
+            for n, tb in enumerate(it):
+                # a resuming consumer replays-and-drops the first
+                # skip_put items: don't pay their device transfer
+                stage = self._device_put and n >= self._skip_put
+                item = dataclasses.replace(
+                    tb, data=jax.device_put(tb.data)) if stage else tb
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(item, timeout=0.05)
+                        break
+                    except queue.Full:
+                        continue
+                else:
+                    return                   # consumer closed early
+            self._put_final(_DONE)
+        except BaseException as e:           # surface in the consumer
+            self._put_final(_Failure(e))
+
+    def _put_final(self, item):
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.05)
+                return
+            except queue.Full:
+                continue
+
+    def __next__(self):
+        if self._stop.is_set():
+            raise StopIteration
+        item = self._q.get()
+        if item is _DONE:
+            self._stop.set()        # exhausted stays exhausted: the next
+            raise StopIteration     # call must not park on an empty queue
+        if isinstance(item, _Failure):
+            self._stop.set()
+            raise item.exc
+        return item
+
+    def close(self):
+        """Stop the producer and release the queue (idempotent)."""
+        self._stop.set()
+        while True:                          # unblock a parked producer
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=2.0)
+
+
+class PrefetchingSource:
+    """DataSource combinator: ``PrefetchingSource(source, depth=2)``.
+
+    Composes with every source in ``repro.train.data`` (epoch, distill-
+    shard, scheduled, chain) — anything iterable of TrainBatch.  Pass a
+    zero-arg factory instead of an iterable when the source must be
+    rebuilt per iteration (generators are single-shot).
+    """
+
+    def __init__(self, source, *, depth: int = 2, device_put: bool = True,
+                 skip_put: int = 0):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self._source = source
+        self.depth = depth
+        self.device_put = device_put
+        # items known to be replay-skipped by the consumer (resume):
+        # decoded and queued, but not staged on device
+        self.skip_put = skip_put
+        self._live: Optional[_PrefetchIterator] = None
+
+    def __iter__(self) -> _PrefetchIterator:
+        self.close()                 # never orphan a previous producer
+        src = self._source() if callable(self._source) else self._source
+        self._live = _PrefetchIterator(src, self.depth, self.device_put,
+                                       self.skip_put)
+        return self._live
+
+    def close(self):
+        if self._live is not None:
+            self._live.close()
+            self._live = None

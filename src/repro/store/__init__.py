@@ -1,0 +1,35 @@
+"""The store half of the million-hour data plane (paper §3.2.2).
+
+"To reduce bandwidth and storage requirements as we parallelize across
+multiple GPUs, we store only the k highest valued logits."  The storage
+math that makes a million hours tractable lives in
+``repro.core.logit_store.storage_bytes_per_frame``: one frame costs
+``k * (2 + 4)`` bytes (bf16 value + int32 index) instead of
+``vocab * 4`` — k=20 against the paper's 3,183 senones is a ~26x
+reduction, and it is what lets target generation "scale out"
+embarrassingly in parallel while the archive stays on disk rather than
+in a database.
+
+This package is LogitStore **v2**: a manifest-backed sharded archive
+(JSON manifest carrying per-shard frame counts, k, vocab, wave tag and
+checksum; memory-mapped shard reads; append/retire semantics so a
+regenerated teacher wave supersedes stale shards atomically) replacing
+the v1 one-npz-per-shard layout, plus a migration reader that serves v1
+archives through the same API.  The codecs (``topk_compress`` /
+``reconstruct``) stay in ``repro.core.logit_store``; producers write
+through ``repro.pipeline.generate`` and consumers read through
+``repro.train.data.distill_shard_source``.
+"""
+from repro.core.logit_store import (full_bytes_per_frame,
+                                    storage_bytes_per_frame)
+from repro.store.logit_store import LogitStoreV2, migrate_v1
+from repro.store.manifest import (Manifest, ShardCorruptionError,
+                                  ShardEntry, StaleWaveError, StoreError,
+                                  file_checksum)
+
+__all__ = [
+    "LogitStoreV2", "migrate_v1",
+    "Manifest", "ShardEntry", "file_checksum",
+    "StoreError", "ShardCorruptionError", "StaleWaveError",
+    "storage_bytes_per_frame", "full_bytes_per_frame",
+]

@@ -1,0 +1,230 @@
+"""LogitStore v2: manifest-backed sharded top-k archive (paper §3.2.2).
+
+Layout under <root>:
+
+    manifest.json                        — the index (repro.store.manifest)
+    shards/shard_<id>_w<wave>.vals.npy   — (N..., k) float16, max-shifted
+    shards/shard_<id>_w<wave>.idx.npy    — (N..., k) int32 vocab ids
+    shards/shard_<id>_w<wave>.lens.npy   — (U,) int32 per-utterance lengths
+
+Raw ``.npy`` (not the v1 compressed ``.npz``) so reads memory-map:
+``read_shard`` costs an mmap + page faults for the touched frames, not a
+full decompress — the student trainer streams a sub-epoch's shards
+without ever holding more than its working set.
+
+Write protocol (``append_shard``): data files land first under
+wave-tagged names, the checksummed manifest entry commits via atomic
+rename, and only then are the superseded wave's files deleted.  The
+supersede is atomic **per shard**: a reader sees each shard's old
+complete wave or its new complete wave, never torn bytes, and a writer
+killed before the manifest commit leaves that shard's previous wave
+live.  Cross-shard consistency is the producer's job — a regeneration
+killed mid-wave durably leaves earlier shards at the new wave and later
+ones at the old, and ``pipeline.generate``'s resumable work ledger is
+what closes that window: the next invocation re-claims the unfinished
+ranges and completes the wave.  (A consumer that must pin one wave for
+a whole pass can check ``manifest`` wave tags; see ROADMAP.)
+
+v1 stores (``shard_*.npz`` + ``meta.json``) migrate via ``migrate_v1``:
+existing archives are indexed in place (format tag "v1-npz", checksum
+computed at migration), readable through the same API, and superseded
+shard-by-shard as a new wave rewrites them in v2 format.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.logit_store import ShardMeta
+from repro.store.manifest import (Manifest, ShardCorruptionError,
+                                  ShardEntry, StoreError, file_checksum)
+
+_SHARD_DIR = "shards"
+_V1_SHARD_RE = re.compile(r"shard_(\d+)\.npz$")
+
+
+class LogitStoreV2:
+    """Manifest-backed sharded archive of (vals f16, idx i32) per frame."""
+
+    def __init__(self, root: str, *, k: int = 0, vocab: int = 0):
+        self.root = root
+        os.makedirs(os.path.join(root, _SHARD_DIR), exist_ok=True)
+        if Manifest.exists(root):
+            self.manifest = Manifest.load(root)
+            # a caller's k/vocab must agree with what is on disk; 0 means
+            # "whatever the store says" (read-only consumers)
+            if k and self.manifest.k and k != self.manifest.k:
+                raise StoreError(f"store has k={self.manifest.k}, "
+                                 f"caller wants k={k}")
+            if vocab and self.manifest.vocab and vocab != self.manifest.vocab:
+                raise StoreError(f"store has vocab={self.manifest.vocab}, "
+                                 f"caller wants vocab={vocab}")
+        elif _find_v1_shards(root):
+            self.manifest = _index_v1(root, k=k, vocab=vocab)
+            self.manifest.save(root)
+        else:
+            self.manifest = Manifest(k=k, vocab=vocab)
+        self.k = self.manifest.k or k
+        self.vocab = self.manifest.vocab or vocab
+
+    # -------------------------------------------------------------- write
+
+    def _shard_files(self, shard_id: int, wave: int) -> dict:
+        stem = os.path.join(_SHARD_DIR, f"shard_{shard_id:05d}_w{wave:04d}")
+        return {"vals": stem + ".vals.npy", "idx": stem + ".idx.npy",
+                "lens": stem + ".lens.npy"}
+
+    def _write_shard_files(self, shard_id: int, vals, idx, utt_lens=None,
+                           *, wave: int = 0) -> ShardEntry:
+        """Stage a shard's data files on disk WITHOUT committing them to
+        the manifest — split out so the commit is a separate, atomic
+        step (and so tests can simulate a writer killed in between)."""
+        vals = np.asarray(vals, dtype=np.float32).astype(np.float16)
+        idx = np.asarray(idx, dtype=np.int32)
+        if vals.shape != idx.shape:
+            raise ValueError(f"vals {vals.shape} != idx {idx.shape}")
+        lens = np.asarray(utt_lens if utt_lens is not None
+                          else [int(np.prod(vals.shape[:-1]))], np.int32)
+        files = self._shard_files(shard_id, wave)
+        np.save(os.path.join(self.root, files["vals"]), vals)
+        np.save(os.path.join(self.root, files["idx"]), idx)
+        np.save(os.path.join(self.root, files["lens"]), lens)
+        return ShardEntry(
+            shard_id=shard_id, wave=wave,
+            n_frames=int(np.prod(idx.shape[:-1])),
+            k=int(idx.shape[-1]), vocab=self.vocab, files=files,
+            checksum=file_checksum(files, self.root), format="v2")
+
+    def _commit(self, entry: ShardEntry):
+        """Manifest swap + retirement of the superseded files."""
+        old = self.manifest.supersede(entry)
+        self.manifest.save(self.root)
+        if old is not None:
+            for rel in old.files.values():
+                path = os.path.join(self.root, rel)
+                if os.path.exists(path):
+                    os.remove(path)
+
+    def append_shard(self, shard_id: int, vals, idx, utt_lens=None, *,
+                     wave: int = 0) -> str:
+        """Write one shard and commit it; returns the vals file path.
+
+        With ``wave`` above the live entry's, the new shard atomically
+        supersedes it (stale files retired after the manifest commit);
+        an older wave raises StaleWaveError.
+        """
+        entry = self._write_shard_files(shard_id, vals, idx, utt_lens,
+                                        wave=wave)
+        self._commit(entry)
+        return os.path.join(self.root, entry.files["vals"])
+
+    # legacy spelling used by v1 call sites (wave 0 append)
+    def write_shard(self, shard_id: int, vals, idx, utt_lens=None):
+        return self.append_shard(shard_id, vals, idx, utt_lens)
+
+    # --------------------------------------------------------------- read
+
+    def read_shard(self, shard_id: int, *, verify: bool = False
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        """-> (vals (..., k) float16, idx (..., k) int32).
+
+        v2 shards come back memory-mapped (zero-copy until touched);
+        v1-npz entries decompress (the migration reader).  ``verify``
+        recomputes the checksum first — it reads every byte, so it is
+        the consumer's opt-in integrity gate, not the default.
+        """
+        entry = self.manifest.entry(shard_id)
+        if verify:
+            self.verify_shard(shard_id)
+        if entry.format == "v1-npz":
+            z = np.load(os.path.join(self.root, entry.files["npz"]))
+            return z["vals"].astype(np.float16), z["idx"].astype(np.int32)
+        vals = np.load(os.path.join(self.root, entry.files["vals"]),
+                       mmap_mode="r")
+        idx = np.load(os.path.join(self.root, entry.files["idx"]),
+                      mmap_mode="r")
+        return vals, idx
+
+    def read_lens(self, shard_id: int) -> np.ndarray:
+        entry = self.manifest.entry(shard_id)
+        if entry.format == "v1-npz":
+            z = np.load(os.path.join(self.root, entry.files["npz"]))
+            return z["utt_lens"].astype(np.int32)
+        return np.load(os.path.join(self.root, entry.files["lens"]))
+
+    # ---------------------------------------------------------- integrity
+
+    def verify_shard(self, shard_id: int):
+        entry = self.manifest.entry(shard_id)
+        got = file_checksum(entry.files, self.root)
+        if got != entry.checksum:
+            raise ShardCorruptionError(
+                f"shard {shard_id} (wave {entry.wave}): checksum "
+                f"{got[:12]}... != manifest {entry.checksum[:12]}...")
+
+    def verify(self) -> int:
+        """Checksum every live shard; returns the count verified."""
+        for sid in self.manifest.shard_ids():
+            self.verify_shard(sid)
+        return len(self.manifest.shards)
+
+    # ------------------------------------------------------------ queries
+
+    def shards(self) -> List[int]:
+        return self.manifest.shard_ids()
+
+    def next_wave(self) -> int:
+        return self.manifest.max_wave() + 1
+
+    def stats(self) -> ShardMeta:
+        """O(manifest) — v1 walked and decompressed every shard."""
+        return ShardMeta(n_frames=self.manifest.n_frames(),
+                         k=self.k, vocab=self.vocab)
+
+
+# ------------------------------------------------------------ v1 migration
+
+def _find_v1_shards(root: str) -> List[Tuple[int, str]]:
+    if not os.path.isdir(root):
+        return []
+    out = []
+    for f in os.listdir(root):
+        m = _V1_SHARD_RE.match(f)
+        if m:
+            out.append((int(m.group(1)), f))
+    return sorted(out)
+
+
+def _index_v1(root: str, *, k: int = 0, vocab: int = 0) -> Manifest:
+    """Build a v2 manifest over an existing v1 archive, in place.
+
+    The npz files are not rewritten — each becomes a "v1-npz" entry with
+    a checksum computed now; subsequent waves supersede them with v2
+    files shard-by-shard.
+    """
+    meta_path = os.path.join(root, "meta.json")
+    if os.path.exists(meta_path):
+        import json
+        with open(meta_path) as f:
+            meta = json.load(f)
+        k = k or int(meta.get("k", 0))
+        vocab = vocab or int(meta.get("vocab", 0))
+    manifest = Manifest(k=k, vocab=vocab)
+    for sid, fname in _find_v1_shards(root):
+        z = np.load(os.path.join(root, fname))
+        files = {"npz": fname}
+        manifest.shards[sid] = ShardEntry(
+            shard_id=sid, wave=0,
+            n_frames=int(np.prod(z["idx"].shape[:-1])),
+            k=int(z["idx"].shape[-1]), vocab=vocab, files=files,
+            checksum=file_checksum(files, root), format="v1-npz")
+    return manifest
+
+
+def migrate_v1(root: str, *, k: int = 0, vocab: int = 0) -> LogitStoreV2:
+    """Open a v1 archive as a v2 store (indexes shards, writes the
+    manifest).  Idempotent: an already-migrated root just loads."""
+    return LogitStoreV2(root, k=k, vocab=vocab)

@@ -1,13 +1,19 @@
-"""Unified Trainer API (ISSUE 2).
+"""Unified Trainer API (ISSUE 2) + the data-plane feed (ISSUE 3).
 
   TrainState            — params + opt + step + rng + strategy state
   DistributedStrategy   — Local / BMUFVmap / BMUFShardMap / GTC
   DataSource            — iterables of TrainBatch (epoch_source,
-                          distill_shard_source, scheduled_source, chain)
+                          distill_shard_source, scheduled_source, chain);
+                          compose with repro.pipeline.PrefetchingSource
+                          for the async host->device feed
   Trainer               — fit() with one lr-as-argument jitted update
-                          per loss kind, periodic checkpointing,
-                          mid-stage resume, pluggable metrics sinks
+                          per loss kind (floats or Schedule objects),
+                          per-update RNG folding for stochastic losses,
+                          periodic checkpointing, mid-stage resume,
+                          optional prefetching feed, metrics sinks
 """
+from repro.optim.schedules import Schedule
+from repro.pipeline.prefetch import PrefetchingSource
 from repro.train.data import (DataSource, TrainBatch, chain,
                               distill_shard_source, epoch_source,
                               scheduled_source)
@@ -24,5 +30,6 @@ __all__ = [
     "DistributedStrategy", "Local", "BMUFVmap", "BMUFShardMap", "GTC",
     "make_sgd_step", "init_opt",
     "epoch_source", "distill_shard_source", "scheduled_source", "chain",
+    "PrefetchingSource", "Schedule",
     "MetricsSink", "ListSink", "JsonlSink", "TeeSink",
 ]

@@ -24,13 +24,20 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Iterable, Iterator
 
 from repro.core import scheduled
+from repro.optim.schedules import Schedule
 
 
 @dataclass
 class TrainBatch:
-    """One microbatch of work: data pytree + the LR and loss to use."""
+    """One microbatch of work: data pytree + the LR and loss to use.
+
+    ``lr`` is a float or an ``optim.schedules.Schedule`` — schedules
+    ride through the source untouched and are evaluated by Trainer.fit
+    at the update counter (still one compile per loss kind: the jitted
+    update sees a traced float either way).
+    """
     data: Any
-    lr: float
+    lr: Any
     loss: str = "default"
 
 
@@ -40,22 +47,31 @@ DataSource = Iterable[TrainBatch]
 def epoch_source(batches_fn: Callable[[int], Iterable[dict]],
                  n_epochs: int, lr, loss: str = "default"
                  ) -> Iterator[TrainBatch]:
-    """n_epochs passes over batches_fn(epoch); lr a float or fn(epoch)."""
+    """n_epochs passes over batches_fn(epoch); lr a float, a Schedule
+    (passed through for per-update evaluation), or fn(epoch)."""
     for ep in range(n_epochs):
-        lr_ep = lr(ep) if callable(lr) else lr
+        lr_ep = lr if isinstance(lr, Schedule) else (
+            lr(ep) if callable(lr) else lr)
         for b in batches_fn(ep):
             yield TrainBatch(b, lr_ep, loss)
 
 
-def distill_shard_source(batches, store, lo: int, hi: int, lr: float,
-                         loss: str = "distill_topk"
-                         ) -> Iterator[TrainBatch]:
+def distill_shard_source(batches, store, lo: int, hi: int, lr,
+                         loss: str = "distill_topk", *,
+                         verify: bool = False) -> Iterator[TrainBatch]:
     """Unlabeled batches [lo, hi) joined with their LogitStore shards
     (shard i holds batch i's teacher top-k — the trainer-aligned layout
-    stage_targets writes)."""
+    stage_targets writes).  Works against v1 (``core.logit_store``) and
+    v2 (``repro.store``) stores alike; with a v2 store, ``verify=True``
+    checksums each shard before it is fed (the decode-side integrity
+    gate — pair with a PrefetchingSource so it runs off the hot path).
+    """
     for bi in range(lo, min(hi, len(batches))):
         b = batches[bi]
-        vals, idx = store.read_shard(bi)
+        if verify:
+            vals, idx = store.read_shard(bi, verify=True)
+        else:
+            vals, idx = store.read_shard(bi)
         yield TrainBatch({"feats": b["feats"], "mask": b["mask"],
                           "topk_vals": vals, "topk_idx": idx}, lr, loss)
 

@@ -37,23 +37,44 @@ from repro.distributed import gtc as gtc_lib
 from repro.optim import (adam_init, adam_update, clip_by_global_norm,
                          momentum_init, momentum_update)
 from repro.train.state import TrainState
+from repro.utils.introspect import takes_rng
 
 tmap = jax.tree_util.tree_map
+
+
+def loss_takes_rng(loss_fn: Callable) -> bool:
+    """A loss opts into stochasticity by declaring an ``rng`` parameter:
+    loss_fn(params, batch, rng=key) -> (loss, metrics).  Two-argument
+    losses stay deterministic and are called exactly as before."""
+    return takes_rng(loss_fn)
+
+
+def call_loss(loss_fn: Callable, params, batch, rng=None):
+    """Dispatch on the loss's arity; a stochastic loss with no key gets
+    a fixed one (the deterministic legacy behavior, e.g. direct step
+    calls outside the Trainer)."""
+    if loss_takes_rng(loss_fn):
+        return loss_fn(params, batch,
+                       rng=jax.random.key(0) if rng is None else rng)
+    return loss_fn(params, batch)
 
 
 def make_sgd_step(loss_fn: Callable, *, optimizer: str = "momentum",
                   clip: float = 1.0):
     """The shared local step: grad -> clip -> optimizer, lr traced.
 
-    loss_fn(params, batch) -> (loss, metrics).  Returns
-    step(params, opt_state, batch, lr) -> (params, opt_state, metrics),
-    compiled once per batch shape regardless of how lr changes.
+    loss_fn(params, batch[, rng]) -> (loss, metrics).  Returns
+    step(params, opt_state, batch, lr, rng=None) -> (params, opt_state,
+    metrics), compiled once per batch shape regardless of how lr
+    changes; ``rng`` (when given) is the per-update key the Trainer
+    folds from TrainState — threaded into losses that declare it.
     """
     upd = momentum_update if optimizer == "momentum" else adam_update
 
-    def step(params, opt_state, batch, lr):
-        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            params, batch)
+    def step(params, opt_state, batch, lr, rng=None):
+        (_, metrics), grads = jax.value_and_grad(
+            lambda p, b: call_loss(loss_fn, p, b, rng),
+            has_aux=True)(params, batch)
         if clip:
             grads, gn = clip_by_global_norm(grads, clip)
             metrics["grad_norm"] = gn
@@ -100,8 +121,12 @@ class Local:
                              clip=self.clip)
 
         def update(state: TrainState, batch, lr):
+            # per-update folding: the carried key is the stream root and
+            # never advances; fold(root, step) is unique per update and
+            # exact under mid-stream resume (step is checkpointed)
+            rng = jax.random.fold_in(state.rng, state.step)
             params, opt, metrics = step(state.params, state.opt_state,
-                                        batch, lr)
+                                        batch, lr, rng)
             return state.replace(params=params, opt_state=opt,
                                  step=state.step + 1), metrics
 
@@ -142,8 +167,10 @@ class GTC:
         clip = self.clip
 
         def update(state: TrainState, batch, lr):
+            rng = jax.random.fold_in(state.rng, state.step)
             (_, metrics), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(state.params, batch)
+                lambda p, b: call_loss(loss_fn, p, b, rng),
+                has_aux=True)(state.params, batch)
             if clip:
                 grads, gn = clip_by_global_norm(grads, clip)
                 metrics["grad_norm"] = gn
@@ -193,8 +220,10 @@ class _BMUFBase:
         block = self._block(loss_fn)
 
         def update(state: TrainState, batches, lr):
+            rng = jax.random.fold_in(state.rng, state.step)
             bstate = {"theta_g": state.params, **state.strategy_state}
-            bstate, opts, ms = block(bstate, state.opt_state, batches, lr)
+            bstate, opts, ms = block(bstate, state.opt_state, batches, lr,
+                                     rng)
             # metrics arrive (W, tau)-shaped from the vmapped scan
             metrics = tmap(jnp.mean, ms)
             return state.replace(

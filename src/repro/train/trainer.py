@@ -18,6 +18,17 @@ consumed-microbatch count goes to the CheckpointStore; ``fit`` with
 ``resume=True`` (default) reloads the latest state and fast-forwards
 the (deterministic) source past the consumed prefix, so a killed stage
 continues instead of restarting.
+
+Stochasticity: each update folds the carried TrainState key with the
+step counter (strategy-side) and threads the folded key into losses
+that declare an ``rng`` parameter — dropout-style losses get a fresh
+stream per update, and resume stays bitwise (the fold depends only on
+checkpointed state).  LR: ``TrainBatch.lr`` may be a float or an
+``optim.schedules.Schedule``; schedules are evaluated at the update
+counter on the host and fed through the same traced lr argument.
+``prefetch=N`` (constructor or fit kwarg) wraps the source in
+``repro.pipeline.PrefetchingSource`` so shard decode + device_put run
+ahead of the jitted update.
 """
 from __future__ import annotations
 
@@ -44,7 +55,8 @@ class Trainer:
                  loss_fns: Union[Callable, Dict[str, Callable]], *,
                  checkpoint: Optional[CheckpointStore] = None,
                  ckpt_every: int = 0,
-                 metrics: Optional[MetricsSink] = None):
+                 metrics: Optional[MetricsSink] = None,
+                 prefetch: int = 0):
         self.strategy = strategy
         if callable(loss_fns):
             loss_fns = {"default": loss_fns}
@@ -53,6 +65,10 @@ class Trainer:
         self.checkpoint = checkpoint
         self.ckpt_every = ckpt_every
         self.metrics = metrics
+        # prefetch > 0: fit() wraps its source in a PrefetchingSource of
+        # that depth — decode + device_put run ahead on a host thread so
+        # the jitted update never blocks on shard reads (repro.pipeline)
+        self.prefetch = prefetch
 
     # ------------------------------------------------------------- state
 
@@ -82,12 +98,31 @@ class Trainer:
 
     def fit(self, state: TrainState, source: DataSource, *,
             resume: bool = True,
-            max_updates: Optional[int] = None) -> TrainState:
+            max_updates: Optional[int] = None,
+            prefetch: Optional[int] = None) -> TrainState:
         consumed = 0
         if resume:
             loaded = self._try_resume(state)
             if loaded is not None:
                 state, consumed = loaded
+        depth = self.prefetch if prefetch is None else prefetch
+        wrapped = None
+        if depth:
+            from repro.pipeline.prefetch import PrefetchingSource
+            if not isinstance(source, PrefetchingSource):
+                # skip_put: the resume replay drops the consumed prefix,
+                # so the producer must not pay its device transfers
+                source = PrefetchingSource(source, depth=depth,
+                                           skip_put=consumed)
+            wrapped = source
+        try:
+            return self._fit_loop(state, source, consumed, max_updates)
+        finally:
+            if wrapped is not None:         # early exit must not leak the
+                wrapped.close()             # producer thread across stages
+
+    def _fit_loop(self, state: TrainState, source, consumed: int,
+                  max_updates: Optional[int]) -> TrainState:
         # step is mirrored on the host (updates are +1 each) so the loop
         # never blocks on the device unless a sink/checkpoint needs to
         step = start_step = int(state.step)
@@ -103,7 +138,9 @@ class Trainer:
             # stack their microbatches, so ragged full-sequence batches
             # only fill blocks with exact shape-mates, and a block never
             # blurs two schedule phases' lrs.  Local/GTC never hit this:
-            # need == 1 means no block is ever partial)
+            # need == 1 means no block is ever partial).  Schedule
+            # objects compare by identity, so one schedule spanning many
+            # updates never splits a block.
             sig = _shape_sig(tb.data) if need > 1 else None
             if group and (tb.loss != gtag or sig != gsig
                           or tb.lr != glr):
@@ -118,8 +155,12 @@ class Trainer:
                     f"source yielded loss kind {gtag!r} but the Trainer "
                     f"only has {sorted(self.updates)}")
             batch = self.strategy.stack(group)
+            # an LR Schedule is evaluated here, at the update counter, on
+            # the host — the update still sees a traced float, so the
+            # one-compile-per-(loss kind, shape) property is untouched
+            lr = glr(step) if callable(glr) else glr
             state, metrics = self.updates[gtag](
-                state, batch, jnp.asarray(glr, jnp.float32))
+                state, batch, jnp.asarray(lr, jnp.float32))
             group = []
             consumed = n_seen
             step += 1

@@ -1,5 +1,6 @@
+from repro.utils.introspect import takes_rng
 from repro.utils.trees import (map_with_path, param_count, param_bytes,
                                split_key_like, tree_paths)
 
 __all__ = ["map_with_path", "param_count", "param_bytes", "split_key_like",
-           "tree_paths"]
+           "takes_rng", "tree_paths"]

@@ -1,0 +1,20 @@
+"""Callable introspection shared by the training layers."""
+from __future__ import annotations
+
+import inspect
+from typing import Callable
+
+
+def takes_rng(fn: Callable) -> bool:
+    """Does `fn` declare an ``rng`` parameter?
+
+    The opt-in contract for per-update stochasticity: losses / train
+    steps that declare ``rng`` receive the Trainer's folded key
+    (repro.train.strategies threads it; distributed.bmuf folds it per
+    (worker, tau-step) inside a block).  One probe, used by both layers
+    — keep the detection rule in exactly one place.
+    """
+    try:
+        return "rng" in inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return False

@@ -10,7 +10,8 @@ except ImportError:          # [test] extra absent: deterministic shim
 
 from repro.core import distill
 from repro.core.logit_store import (LogitStore, full_bytes_per_frame,
-                                    reconstruct, storage_bytes_per_frame,
+                                    iter_reconstruct, reconstruct,
+                                    storage_bytes_per_frame,
                                     topk_compress)
 
 
@@ -104,6 +105,78 @@ def test_logit_store_roundtrip(tmp_path):
     np.testing.assert_allclose(np.asarray(v2, np.float32), vals, atol=1e-2)
     meta = store.stats()
     assert meta.n_frames == 60 and meta.k == 4
+
+
+def _topk_case(n_rows, v, k, seed=0):
+    rng = np.random.default_rng(seed)
+    vals = jnp.asarray(rng.normal(size=(n_rows, k)), jnp.float32)
+    idx = jnp.asarray(
+        np.stack([rng.choice(v, k, replace=False)
+                  for _ in range(n_rows)]), jnp.int32)
+    return vals, idx
+
+
+def test_reconstruct_chunked_matches_unchunked():
+    """row_chunk streaming == the one-shot scatter, bitwise, including
+    the ragged tail (n_rows not a multiple of the chunk)."""
+    v, k = 123, 5
+    vals, idx = _topk_case(17, v, k)
+    ref = reconstruct(vals, idx, v)
+    for rc in (4, 5, 16, 17, 64):
+        got = reconstruct(vals, idx, v, row_chunk=rc)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    # leading batch dims reshape through identically
+    vals3 = vals.reshape(1, 17, k)
+    idx3 = idx.reshape(1, 17, k)
+    got3 = reconstruct(vals3, idx3, v, row_chunk=4)
+    np.testing.assert_array_equal(np.asarray(got3)[0], np.asarray(ref))
+
+
+def test_reconstruct_chunked_bounds_scatter_working_set():
+    """The large-vocab regression pin: inside the chunked path's scan
+    body, no intermediate exceeds one (row_chunk, vocab) block — the
+    full canvas only ever exists as the final output, never (as in the
+    unchunked scatter) as a second working copy."""
+    v, k, n, rc = 500, 4, 256, 16
+    vals, idx = _topk_case(n, v, k, seed=3)
+
+    jaxpr = jax.make_jaxpr(
+        lambda va, ix: reconstruct(va, ix, v, row_chunk=rc))(vals, idx)
+
+    def body_avals(jxp):
+        out = []
+        for eqn in jxp.eqns:
+            for sub in jax.core.jaxprs_in_params(eqn.params) \
+                    if hasattr(jax.core, "jaxprs_in_params") else []:
+                out.extend(body_avals(sub))
+            if eqn.primitive.name in ("scan", "while"):
+                inner = eqn.params.get("jaxpr")
+                if inner is not None:
+                    ij = getattr(inner, "jaxpr", inner)
+                    for e in ij.eqns:
+                        out.extend(x.aval for x in e.outvars)
+        return out
+
+    inner_avals = body_avals(jaxpr)
+    assert inner_avals, "chunked path must lower to a scan"
+    cap = rc * v
+    for aval in inner_avals:
+        assert int(np.prod(aval.shape)) <= cap, (
+            f"scan-body intermediate {aval.shape} exceeds one "
+            f"(row_chunk={rc}, vocab={v}) block")
+
+
+def test_iter_reconstruct_streams_blocks():
+    """Host-side streaming reconstruction: block-bounded shapes, exact
+    content."""
+    v, k = 97, 4
+    vals, idx = _topk_case(11, v, k, seed=5)
+    ref = np.asarray(reconstruct(vals, idx, v))
+    seen = np.zeros_like(ref)
+    for lo, hi, block in iter_reconstruct(vals, idx, v, row_chunk=4):
+        assert block.shape[0] <= 4 and block.shape[1] == v
+        seen[lo:hi] = block
+    np.testing.assert_allclose(seen, ref, atol=1e-5)
 
 
 def test_soft_ce_self_is_entropy():

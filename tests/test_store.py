@@ -1,0 +1,161 @@
+"""LogitStore v2 (ISSUE 3 tentpole): manifest-backed sharded archive —
+round-trips, v1 migration, checksum integrity, wave-supersede atomicity."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.logit_store import LogitStore
+from repro.store import (LogitStoreV2, Manifest, ShardCorruptionError,
+                         StaleWaveError, StoreError, migrate_v1)
+
+
+def _shard(seed=0, b=2, s=6, k=4, v=50):
+    rng = np.random.default_rng(seed)
+    vals = rng.normal(size=(b, s, k)).astype(np.float32)
+    # max-shifted like the codec: <= 0, bf16/f16-friendly
+    vals = vals - vals.max(-1, keepdims=True)
+    idx = rng.integers(0, v, (b, s, k)).astype(np.int32)
+    return vals, idx
+
+
+# ---------------------------------------------------------------- basics
+
+def test_roundtrip_and_manifest_stats(tmp_path):
+    store = LogitStoreV2(str(tmp_path), k=4, vocab=50)
+    vals, idx = _shard(0)
+    store.append_shard(0, vals, idx, utt_lens=[6, 6])
+    v, i = store.read_shard(0)
+    np.testing.assert_array_equal(np.asarray(i), idx)
+    np.testing.assert_allclose(np.asarray(v, np.float32), vals, atol=1e-2)
+    np.testing.assert_array_equal(store.read_lens(0), [6, 6])
+    # stats come from the manifest — O(1) file reads, not a shard walk
+    meta = store.stats()
+    assert meta.n_frames == 12 and meta.k == 4 and meta.vocab == 50
+    # reopening sees the same manifest
+    again = LogitStoreV2(str(tmp_path))
+    assert again.shards() == [0] and again.k == 4 and again.vocab == 50
+
+
+def test_reads_are_memory_mapped(tmp_path):
+    store = LogitStoreV2(str(tmp_path), k=4, vocab=50)
+    vals, idx = _shard(1)
+    store.append_shard(0, vals, idx)
+    v, i = store.read_shard(0)
+    assert isinstance(v, np.memmap) and isinstance(i, np.memmap)
+
+
+def test_k_vocab_mismatch_rejected(tmp_path):
+    LogitStoreV2(str(tmp_path), k=4, vocab=50).append_shard(0, *_shard(0))
+    with pytest.raises(StoreError):
+        LogitStoreV2(str(tmp_path), k=8, vocab=50)
+    with pytest.raises(StoreError):
+        LogitStoreV2(str(tmp_path), k=4, vocab=99)
+
+
+# ------------------------------------------------------------- integrity
+
+def test_checksum_rejects_corrupted_shard(tmp_path):
+    store = LogitStoreV2(str(tmp_path), k=4, vocab=50)
+    vals, idx = _shard(2)
+    store.append_shard(0, vals, idx)
+    store.verify()                              # intact: passes
+    path = os.path.join(store.root, store.manifest.entry(0).files["vals"])
+    with open(path, "r+b") as f:                # flip bytes past the header
+        f.seek(os.path.getsize(path) - 4)
+        f.write(b"\xff\xff\xff\xff")
+    fresh = LogitStoreV2(str(tmp_path))
+    with pytest.raises(ShardCorruptionError):
+        fresh.read_shard(0, verify=True)
+    with pytest.raises(ShardCorruptionError):
+        fresh.verify()
+    # unverified mmap read still works (opt-in integrity, by design)
+    fresh.read_shard(0)
+
+
+# ------------------------------------------------------- wave supersede
+
+def test_wave_supersede_is_atomic(tmp_path):
+    """A regenerated wave replaces a shard atomically: files staged
+    without a manifest commit are invisible (killed writer), the commit
+    swaps the entry in one rename, and only then are stale files
+    retired."""
+    store = LogitStoreV2(str(tmp_path), k=4, vocab=50)
+    v0, i0 = _shard(3)
+    store.append_shard(0, v0, i0)
+    old_files = dict(store.manifest.entry(0).files)
+
+    # stage wave-1 files but "die" before the manifest commit
+    v1_, i1_ = _shard(4)
+    staged = store._write_shard_files(0, v1_, i1_, wave=1)
+    reader = LogitStoreV2(str(tmp_path))        # fresh open = fresh manifest
+    got_v, got_i = reader.read_shard(0, verify=True)
+    np.testing.assert_array_equal(np.asarray(got_i), i0)  # still wave 0
+    assert reader.manifest.entry(0).wave == 0
+
+    # commit: readers now see wave 1, wave-0 files are retired
+    store._commit(staged)
+    reader2 = LogitStoreV2(str(tmp_path))
+    got_v2, got_i2 = reader2.read_shard(0, verify=True)
+    np.testing.assert_array_equal(np.asarray(got_i2), i1_)
+    assert reader2.manifest.entry(0).wave == 1
+    for rel in old_files.values():
+        assert not os.path.exists(os.path.join(str(tmp_path), rel))
+
+
+def test_stale_wave_rejected_and_same_wave_idempotent(tmp_path):
+    store = LogitStoreV2(str(tmp_path), k=4, vocab=50)
+    v, i = _shard(5)
+    store.append_shard(0, v, i, wave=2)
+    with pytest.raises(StaleWaveError):
+        store.append_shard(0, v, i, wave=1)
+    # same-wave rewrite (idempotent retry) is fine
+    store.append_shard(0, v, i, wave=2)
+    store.verify()
+    assert store.next_wave() == 3
+
+
+# ----------------------------------------------------------- v1 -> v2
+
+def test_v1_migration_roundtrip(tmp_path):
+    """A v1 archive opens as a v2 store in place: same shards, same
+    contents, checksummed; a new wave then supersedes shard-by-shard
+    into v2 format and the npz is retired."""
+    root = str(tmp_path / "s")
+    v1 = LogitStore(root, k=4, vocab=50)
+    shards = {j: _shard(10 + j) for j in range(3)}
+    for j, (v, i) in shards.items():
+        v1.write_shard(j, v, i, utt_lens=[6, 6])
+
+    store = migrate_v1(root)
+    assert store.k == 4 and store.vocab == 50
+    assert store.shards() == [0, 1, 2]
+    assert store.verify() == 3
+    for j, (v, i) in shards.items():
+        got_v, got_i = store.read_shard(j)
+        assert store.manifest.entry(j).format == "v1-npz"
+        np.testing.assert_array_equal(np.asarray(got_i), i)
+        np.testing.assert_allclose(np.asarray(got_v, np.float32), v,
+                                   atol=1e-2)
+    assert store.stats().n_frames == 36
+
+    # a regeneration wave supersedes the migrated entries with v2 files
+    v_new, i_new = _shard(99)
+    store.append_shard(1, v_new, i_new, wave=1)
+    entry = store.manifest.entry(1)
+    assert entry.format == "v2" and entry.wave == 1
+    assert not os.path.exists(os.path.join(root, "shard_00001.npz"))
+    got_v, got_i = store.read_shard(1, verify=True)
+    np.testing.assert_array_equal(np.asarray(got_i), i_new)
+    # untouched v1 siblings still read and verify
+    store.verify()
+
+
+def test_manifest_atomic_write_survives_garbage_tmp(tmp_path):
+    """A leftover .tmp from a killed writer never shadows the manifest."""
+    store = LogitStoreV2(str(tmp_path), k=4, vocab=50)
+    store.append_shard(0, *_shard(0))
+    with open(Manifest.path_for(str(tmp_path)) + ".tmp", "w") as f:
+        f.write("{not json")
+    again = LogitStoreV2(str(tmp_path))
+    assert again.shards() == [0]
