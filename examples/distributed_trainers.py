@@ -20,7 +20,8 @@ from repro.distributed.bmuf import BMUFConfig
 from repro.distributed.gtc import GTCConfig
 from repro.launch.steps import make_loss_fn
 from repro.models import build_model
-from repro.train import (GTC, BMUFVmap, ListSink, Trainer, epoch_source)
+from repro.train import (GTC, BMUFVmap, GTCShardMap, ListSink, Trainer,
+                         epoch_source)
 
 
 def run(strategy, label, *, model, cfg, batches, epochs=3, lr=5e-2):
@@ -50,12 +51,18 @@ def main():
     print(f"  wire density {dens:.3f} "
           f"(bandwidth saving ~{1 / max(dens, 1e-3):.0f}x)")
 
+    print("\n== GTCShardMap (2 workers, int8 wire over the mesh) ==")
+    mesh = jax.make_mesh((1,), ("data",))
+    run(GTCShardMap(GTCConfig(tau=5e-4, n_workers=2), mesh),
+        "gtc_shardmap", model=model, cfg=cfg, batches=batches)
+
     bc = BMUFConfig(n_workers=4, block_steps=2)
     print(f"\n== BMUF ({bc.n_workers} workers, block sync every "
           f"{bc.block_steps} steps) ==")
     run(BMUFVmap(bc), "bmuf", model=model, cfg=cfg, batches=batches)
 
-    print("\nGTC communicates every step (compressed); BMUF every "
+    print("\nGTC communicates every step (a compressed int8 psum — "
+          "GTCShardMap is the worker-axis-sharded form); BMUF every "
           f"{bc.block_steps} steps (full model mean + block momentum).")
 
 

@@ -38,6 +38,7 @@ from typing import Dict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.checkpoint import CheckpointStore
 from repro.configs.lstm_am_7khr import CONFIG as AM_CONFIG
@@ -54,9 +55,23 @@ from repro.launch.steps import make_loss_fn
 from repro.models import build_model
 from repro.seqtrain import build_denominator_graph, make_smbr_loss_fn
 from repro.seqtrain.smbr import frame_error_rate
-from repro.train import (GTC, BMUFVmap, ListSink, Local, TrainBatch,
-                         Trainer, chain, distill_shard_source,
+from repro.train import (GTC, BMUFVmap, GTCShardMap, ListSink, Local,
+                         TrainBatch, Trainer, chain, distill_shard_source,
                          epoch_source, scheduled_source)
+
+
+def _pad_time(batch: dict, t: int) -> dict:
+    """Zero-pad every (B, T, ...) leaf of a full-seq batch to T = t
+    (mask rows stay 0 over the padding, so losses are unchanged)."""
+    out = {}
+    for k, v in batch.items():
+        if getattr(v, "ndim", 0) >= 2 and v.shape[1] < t:
+            pad = [(0, 0)] * v.ndim
+            pad[1] = (0, t - v.shape[1])
+            out[k] = np.pad(v, pad)
+        else:
+            out[k] = v
+    return out
 
 
 @dataclass
@@ -90,6 +105,10 @@ class PipelineConfig:
     chunked_until: int = 3
     # trainers
     gtc_tau: float = 2e-4
+    gtc_workers: int = 2              # sMBR sequence-training workers:
+                                      # >1 runs GTCShardMap (int8 wire,
+                                      # worker axis on a mesh), 1 the
+                                      # single-process GTC strategy
     bmuf_workers: int = 4
     bmuf_block_steps: int = 2
     smbr_epochs: int = 2
@@ -152,15 +171,24 @@ class SSLPipeline:
 
     # ------------------------------------------------------------- helpers
 
-    def _batches(self, rng, *, chunked: bool, offset: int = 0, seed: int = 0):
+    def _batches(self, rng, *, chunked: bool, offset: int = 0, seed: int = 0,
+                 uniform_len: bool = False):
         start, count = rng
         if chunked:
             return list(self.loader.chunked_batches(
                 start, count, batch_size=self.pc.batch,
                 chunk_len=self.pc.chunk_len, offset=offset, seed=seed))
-        return list(self.loader.full_seq_batches(
+        bs = list(self.loader.full_seq_batches(
             start, count, batch_size=max(2, self.pc.batch // 2),
             offset=offset))
+        if uniform_len and bs:
+            # pad every batch to the corpus max: multi-microbatch
+            # strategies (GTCShardMap consumes one batch per worker)
+            # group shape-mates, so ragged full-seq batches would drop
+            # partial groups at every length boundary
+            t = max(b["feats"].shape[1] for b in bs)
+            bs = [_pad_time(b, t) for b in bs]
+        return bs
 
     def val_batch(self):
         if self._val_batch is None:
@@ -340,8 +368,12 @@ class SSLPipeline:
 
         def unlabeled(phase):
             lo = (phase.sub_epoch - 1) * per_sub
+            # pin_wave: each sub-epoch snapshots its shards' manifest
+            # entries at start — a teacher regeneration landing a new
+            # wave mid-sub-epoch cannot mix targets into this pass
             return distill_shard_source(unl_batches, store, lo,
-                                        lo + per_sub, phase.lr)
+                                        lo + per_sub, phase.lr,
+                                        pin_wave=True)
 
         def labeled(phase):
             return (TrainBatch(b, phase.lr, "ce")
@@ -366,9 +398,32 @@ class SSLPipeline:
                 "rel_fer_reduction_pct":
                     round(100 * (base_fer - fer) / max(base_fer, 1e-9), 2)}
 
+    def _smbr_strategy(self):
+        """The paper's 16-GPU sMBR trainer: threshold-compressed SGD.
+        ``gtc_workers > 1`` runs the worker axis through GTCShardMap on
+        a mesh (the axis spans the devices when the worker count
+        divides them, else one device vmap-carries all workers — the
+        same math either way, pinned bitwise in tests)."""
+        pc = self.pc
+        if pc.gtc_workers <= 1:
+            return GTC(GTCConfig(tau=pc.gtc_tau, n_workers=1), clip=0.0)
+        # widest mesh the worker count divides onto: each device carries
+        # workers/n_dev unrolled workers (all of them on 1 device at
+        # laptop scale; one each on the paper's 16-GPU shape)
+        n_dev = max(d for d in range(1, min(pc.gtc_workers,
+                                            jax.device_count()) + 1)
+                    if pc.gtc_workers % d == 0)
+        mesh = jax.make_mesh((n_dev,), ("data",))
+        return GTCShardMap(
+            GTCConfig(tau=pc.gtc_tau, n_workers=pc.gtc_workers),
+            mesh, clip=0.0)
+
     def stage_smbr(self) -> Dict:
         """Sequence training of the SSL student on labeled data only,
-        under GTC — the paper's sMBR trainer (§3.4)."""
+        under threshold-compressed SGD — the paper's sMBR trainer
+        (§3.4), multi-worker by default (``gtc_workers``): each update
+        consumes one batch per worker and exchanges int8-packed sends
+        over the worker axis."""
         pc = self.pc
         stage = f"student_{self.student_trainer}"
         params = self._load_or_none(stage, self.student_cfg)
@@ -377,13 +432,14 @@ class SSLPipeline:
         model = build_model(self.student_cfg)
         sink = ListSink()
         tr = self._trainer(
-            "smbr", GTC(GTCConfig(tau=pc.gtc_tau, n_workers=1), clip=0.0),
+            "smbr", self._smbr_strategy(),
             {"smbr": make_smbr_loss_fn(model, self.student_cfg,
                                        self._graph(),
                                        kappa=pc.smbr_kappa)}, sink)
         state = tr.init_state(params, seed=pc.seed)
         state = tr.fit(state, epoch_source(
-            lambda ep: self._batches(self.rng_labeled, chunked=False),
+            lambda ep: self._batches(self.rng_labeled, chunked=False,
+                                     uniform_len=pc.gtc_workers > 1),
             pc.smbr_epochs, pc.smbr_lr, "smbr"))
         tr.finalize(state)
         self._ckpt("smbr").save(0, state.params)

@@ -11,23 +11,42 @@ bit-faithful on the *algorithm* side:
 TPU adaptation (DESIGN.md §2): the GPU implementation ships sparse
 (index, ±tau) pairs peer-to-peer; TPU ICI collectives have no sparse
 all-reduce, so the transport is a dense psum of the (mostly-zero,
-1.58-bit-entropy) send tensor — optionally int8-packed, which is where the
-bandwidth saving appears in the collective roofline term.  The selection /
-residual math (the accuracy-relevant part) is unchanged and is also
-implemented as a Pallas kernel (``repro.kernels.gtc_compress``).
+1.58-bit-entropy) send tensor — int8-packed, which is where the
+bandwidth saving appears in the collective roofline term.  A psum of
+ternary int8 messages over <= 127 workers cannot overflow int8, so the
+wire stays 1 byte/element (4x under f32); beyond 127 workers the
+accumulation must widen to int32 (``GTCConfig.int32_accum``) and
+``pack_int8`` *refuses* to build the narrow wire rather than silently
+wrapping.
+
+One code path owns the math.  ``compress_tree`` is the error-feedback
+selection (optionally dispatched to the fused Pallas kernel
+``repro.kernels.gtc_compress`` via ``GTCConfig.use_kernel``, with the
+pure-jnp ref as fallback); ``pack_int8`` / ``unpack_int8`` are the only
+pack/unpack pair; ``wire_reduce`` is the wire itself — the same
+function serves the single-process ``train.GTC`` strategy (a degenerate
+pack/unpack round-trip), ``make_gtc_allreduce`` (inside an existing
+shard_map/pmap), and ``make_sharded_gtc_train_step`` (the
+worker-axis-sharded step that ``train.GTCShardMap`` wraps).
 
 Adaptive threshold: Strom fixes tau; we also provide the common variant
 that adapts tau per-tensor to hit a target sparsity, used when sweeping.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.gtc_compress import gtc_compress
+from repro.kernels.gtc_compress.ref import gtc_compress_ref
+
 tmap = jax.tree_util.tree_map
+
+MAX_INT8_WORKERS = 127       # |sum of W ternary messages| <= W must fit int8
 
 
 @dataclass(frozen=True)
@@ -35,60 +54,151 @@ class GTCConfig:
     tau: float = 1e-3
     quantize_int8: bool = True       # pack the send tensor to int8 on the wire
     n_workers: int = 16
+    int32_accum: bool = False        # widen the psum to int32 (required
+                                     # beyond 127 workers; the narrow int8
+                                     # wire is exact below that)
+    use_kernel: bool = False         # fused Pallas compression kernel
+                                     # (interpret-mode on CPU) vs the ref
 
 
-def compress_leaf(g, r, tau: float):
+# ----------------------------------------------------------- compression
+
+def compress_leaf(g, r, tau: float, *, use_kernel: bool = False):
     """One tensor: error-feedback threshold compression.
 
     Returns (send, new_residual); send has values in {-tau, 0, +tau}.
+    ``use_kernel`` routes through the fused Pallas pass
+    (``repro.kernels.gtc_compress`` — same math, one HBM round-trip);
+    the default is the pure-jnp reference.  Both are float32 and
+    bitwise-identical.
     """
-    acc = r + g.astype(jnp.float32)
-    mask = jnp.abs(acc) > tau
-    send = jnp.where(mask, jnp.sign(acc) * tau, 0.0)
-    return send, acc - send
+    if use_kernel:
+        return gtc_compress(g, r, tau)    # auto: compiled on TPU,
+                                          # interpret mode elsewhere
+    return gtc_compress_ref(jnp.asarray(g), jnp.asarray(r, jnp.float32), tau)
 
 
-def compress_tree(grads, residuals, tau: float):
+def compress_tree(grads, residuals, tau: float, *, use_kernel: bool = False):
     flat_g, treedef = jax.tree_util.tree_flatten(grads)
     flat_r = treedef.flatten_up_to(residuals)
     sends, ress = [], []
     for g, r in zip(flat_g, flat_r):
-        s, nr = compress_leaf(g, r, tau)
+        s, nr = compress_leaf(g, r, tau, use_kernel=use_kernel)
         sends.append(s)
         ress.append(nr)
     return treedef.unflatten(sends), treedef.unflatten(ress)
 
 
-def pack_int8(send, tau: float):
-    """{-tau,0,tau} -> int8 {-1,0,1}: the wire format (4x smaller than f32,
-    2x smaller than bf16). psum of int8 over <=127 workers cannot overflow
-    ... but XLA all-reduces int8 at int8 width, so accumulate in int32."""
+# ------------------------------------------------------------------ wire
+
+def pack_int8(send, tau: float, *, n_workers: int = 1,
+              int32_accum: bool = False):
+    """{-tau,0,tau} -> int8 {-1,0,1}: the wire format (4x smaller than
+    f32, 2x smaller than bf16).
+
+    ``n_workers`` is the number of ternary messages the reduction will
+    sum.  At int8 accumulation width the sum is exact only while
+    ``n_workers <= 127``; past that the packed wire would silently wrap,
+    so this *raises* unless the caller opted into int32 accumulation.
+    """
+    if n_workers > MAX_INT8_WORKERS and not int32_accum:
+        raise ValueError(
+            f"pack_int8: summing {n_workers} ternary int8 messages "
+            f"overflows int8 (|sum| <= {n_workers} > {MAX_INT8_WORKERS}); "
+            f"set int32_accum=True to widen the accumulation")
     return jnp.clip(jnp.round(send / tau), -1, 1).astype(jnp.int8)
 
 
 def unpack_int8(packed, tau: float, n_workers_summed: int = 1):
-    return packed.astype(jnp.float32) * tau
+    """Packed (possibly summed) wire integers -> the averaged float
+    update: ``packed * tau / n_workers_summed``.  With
+    ``n_workers_summed=1`` this is the exact inverse of ``pack_int8``
+    on a single message."""
+    out = packed.astype(jnp.float32) * tau
+    if n_workers_summed != 1:
+        out = out / n_workers_summed
+    return out
 
 
-def gtc_init(params):
+def wire_pack(send, cfg: GTCConfig):
+    """One worker's send tensor -> its wire message: ternary int8 (or
+    int32-widened when ``cfg.int32_accum``), or the raw f32 send when
+    the wire is unquantized.  Messages from co-resident workers add
+    exactly (integers) before the psum."""
+    if not cfg.quantize_int8:
+        return send
+    p = pack_int8(send, cfg.tau, n_workers=cfg.n_workers,
+                  int32_accum=cfg.int32_accum)
+    return p.astype(jnp.int32) if cfg.int32_accum else p
+
+def wire_unpack(acc, cfg: GTCConfig, *, axis_name: Optional[str] = None):
+    """Accumulated wire messages -> the averaged float update;
+    ``axis_name`` adds the cross-device psum (THE collective — at int8
+    width when quantized and not widened)."""
+    if axis_name is not None:
+        acc = jax.lax.psum(acc, axis_name)
+    if cfg.quantize_int8:
+        return unpack_int8(acc, cfg.tau, n_workers_summed=cfg.n_workers)
+    return acc / cfg.n_workers if cfg.n_workers != 1 else acc
+
+
+def wire_reduce(sends, cfg: GTCConfig, *,
+                axis_name: Optional[str] = None):
+    """THE wire for one local worker: pack -> (psum) -> unpack-average,
+    one code path.  ``sends``: that worker's pytree of send tensors
+    (values in {-tau, 0, +tau}).  With no ``axis_name`` this is the
+    single-worker wire — for the int8 format a pack/unpack round-trip
+    that is bitwise-identity on ternary sends, so the single-process
+    strategy and the sharded step share the exact arithmetic.
+
+    Returns the update averaged over ``cfg.n_workers`` (the paper
+    applies the raw sum; we normalize so LR is worker-count
+    independent).  Multi-worker-per-device accumulation happens in
+    ``make_sharded_gtc_train_step`` via the same ``wire_pack`` /
+    ``wire_unpack`` pair.
+    """
+    return tmap(lambda s: wire_unpack(wire_pack(s, cfg), cfg,
+                                      axis_name=axis_name), sends)
+
+
+def wire_bytes_per_update(params, cfg: GTCConfig) -> int:
+    """Bytes one worker ships per update under ``cfg``'s wire format
+    (the collective roofline term the int8 pack is buying down).
+
+    Measured from what ``wire_pack`` — the function the trainer
+    actually ships through — emits for each leaf (via eval_shape, no
+    compute), so a regression in the packing path moves this number
+    rather than leaving an analytic constant standing."""
+    total = 0
+    for p in jax.tree_util.tree_leaves(params):
+        msg = jax.eval_shape(
+            lambda s: wire_pack(s, cfg),
+            jax.ShapeDtypeStruct(p.shape, jnp.float32))
+        total += math.prod(msg.shape) * msg.dtype.itemsize
+    return total
+
+
+def gtc_init(params, cfg: Optional[GTCConfig] = None):
+    """Error-feedback residuals.  With a ``cfg``, residuals are
+    per-worker: stacked on a leading W dim, even at W=1 (each worker
+    carries its own compression error — the state
+    ``make_sharded_gtc_train_step`` shards over the worker axis).
+    Without one, the single-process unstacked form."""
+    if cfg is not None:
+        return {"residual": tmap(
+            lambda p: jnp.zeros((cfg.n_workers,) + p.shape, jnp.float32),
+            params)}
     return {"residual": tmap(lambda p: jnp.zeros(p.shape, jnp.float32),
                              params)}
 
 
 def make_gtc_allreduce(cfg: GTCConfig, axis_name: str):
-    """Inside shard_map/pmap: compress locally, psum the sparse message."""
+    """Inside shard_map/pmap (one worker per shard): compress locally,
+    reduce the sparse message over ``axis_name`` via ``wire_reduce``."""
     def allreduce(grads, gtc_state):
-        send, res = compress_tree(grads, gtc_state["residual"], cfg.tau)
-        if cfg.quantize_int8:
-            summed = tmap(
-                lambda s: jax.lax.psum(pack_int8(s, cfg.tau)
-                                       .astype(jnp.int32), axis_name)
-                .astype(jnp.float32) * cfg.tau, send)
-        else:
-            summed = tmap(lambda s: jax.lax.psum(s, axis_name), send)
-        # average over workers (the paper applies the summed update; we
-        # normalize so LR is worker-count independent)
-        avg = tmap(lambda s: s / cfg.n_workers, summed)
+        send, res = compress_tree(grads, gtc_state["residual"], cfg.tau,
+                                  use_kernel=cfg.use_kernel)
+        avg = wire_reduce(send, cfg, axis_name=axis_name)
         return avg, {"residual": res}
     return allreduce
 
@@ -117,6 +227,111 @@ def make_gtc_train_step(loss_fn: Callable, optimizer_update: Callable,
     return step
 
 
+# ------------------------------------------------------ shard_map wrapper
+
+def make_sharded_gtc_train_step(loss_fn: Callable,
+                                optimizer_update: Callable,
+                                cfg: GTCConfig, mesh,
+                                worker_axes=("data",),
+                                grad_transform: Optional[Callable] = None):
+    """Production GTC: the worker dim sharded over `worker_axes` of `mesh`.
+
+    The multi-worker form of ``make_gtc_train_step`` with the worker
+    axis materialized: batches and error-feedback residuals carry a
+    leading W dim sharded over the mesh (each shard vmaps its local
+    worker slice), params/opt state are replicated (synchronous SGD:
+    every worker applies the same averaged update), and the exchange is
+    ``wire_reduce`` — local-W sum + one psum per leaf, int8-packed.
+
+    loss_fn(params, batch[, rng]) -> (loss, metrics); a loss declaring
+    ``rng`` receives a per-(update, worker) folded key — folded OUTSIDE
+    the shard_map with the *global* worker index (crossing as raw key
+    data), so device count never changes the streams.
+    ``grad_transform(grads) -> (grads, extra_metrics)`` runs per worker
+    before compression (gradient clipping lives here).  Returns
+    step(params, opt_state, gtc_state, batches, lr, rng=None) with lr
+    traced — one compile per loss kind.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.utils.introspect import takes_rng as _takes
+
+    ax = worker_axes if len(worker_axes) > 1 else worker_axes[0]
+    takes_rng = _takes(loss_fn)
+
+    def shard_body(residuals, batches, params, opt_state, lr, wkd):
+        def local_one(residual, batch, kd):
+            if kd is not None:
+                (_, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, batch, rng=jax.random.wrap_key_data(kd))
+            else:
+                (_, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, batch)
+            m = dict(m)
+            if grad_transform is not None:
+                g, extra = grad_transform(g)
+                m.update(extra)
+            send, new_res = compress_tree(g, residual, cfg.tau,
+                                          use_kernel=cfg.use_kernel)
+            return tmap(lambda s: wire_pack(s, cfg), send), new_res, m
+
+        # the local worker slice is unrolled, not vmapped: each worker's
+        # compute lowers exactly as the single-worker path does (that is
+        # what makes the W=1 strategy-equivalence and the
+        # simulate_gtc_round comparisons *bitwise*, not approximate), and
+        # in production the slice is one worker per device anyway
+        local_w = jax.tree_util.tree_leaves(residuals)[0].shape[0]
+        acc, res_i, ms_i = None, [], []
+        for i in range(local_w):
+            packed, new_res, m = local_one(
+                tmap(lambda r: r[i], residuals),
+                tmap(lambda b: b[i], batches),
+                None if wkd is None else wkd[i])
+            acc = packed if acc is None else tmap(jnp.add, acc, packed)
+            res_i.append(new_res)
+            ms_i.append(m)
+        update = tmap(lambda a: wire_unpack(a, cfg, axis_name=ax), acc)
+        new_res = tmap(lambda *xs: jnp.stack(xs), *res_i)
+        ms = tmap(lambda *xs: jnp.stack(xs), *ms_i)
+        ms["gtc_density"] = jnp.broadcast_to(density(update, cfg.tau),
+                                             (local_w,))
+        params, opt_state = optimizer_update(params, update, opt_state,
+                                             lr=lr)
+        return params, opt_state, new_res, ms
+
+    wspec = P(ax)       # leading worker dim sharded
+    rspec = P()         # params / opt state / lr replicated
+
+    def step(params, opt_state, gtc_state, batches, lr, rng=None):
+        lr = jnp.asarray(lr, jnp.float32)
+        if rng is None or not takes_rng:
+            fn = shard_map(
+                lambda r, b, p, o, l: shard_body(r, b, p, o, l, None),
+                mesh=mesh,
+                in_specs=(wspec, wspec, rspec, rspec, rspec),
+                out_specs=(rspec, rspec, wspec, wspec),
+                check_rep=False)
+            params, opt_state, res, ms = fn(gtc_state["residual"], batches,
+                                            params, opt_state, lr)
+        else:
+            # per-worker keys folded OUTSIDE shard_map with the global
+            # worker index (as the BMUF path does): device count never
+            # changes the streams, and raw key data crosses the boundary
+            wkd = jax.vmap(lambda i: jax.random.key_data(
+                jax.random.fold_in(rng, i)))(jnp.arange(cfg.n_workers))
+            fn = shard_map(
+                shard_body, mesh=mesh,
+                in_specs=(wspec, wspec, rspec, rspec, rspec, wspec),
+                out_specs=(rspec, rspec, wspec, wspec),
+                check_rep=False)
+            params, opt_state, res, ms = fn(gtc_state["residual"], batches,
+                                            params, opt_state, lr, wkd)
+        return params, opt_state, {"residual": res}, ms
+
+    return step
+
+
 def density(update_tree, tau: float) -> jnp.ndarray:
     """Fraction of nonzero elements actually shipped (diagnostic)."""
     nz = sum(jnp.sum(jnp.abs(u) > 0).astype(jnp.float32)
@@ -134,17 +349,40 @@ def adaptive_tau(g, target_density: float):
 
 # ------------------------------------------------- reference (single host)
 
-def simulate_gtc_round(grads_per_worker, residuals_per_worker, tau: float):
+def simulate_gtc_round(grads_per_worker, residuals_per_worker, tau: float,
+                       *, quantize_int8: bool = False,
+                       int32_accum: bool = False):
     """Numpy-free reference of one full ring exchange for tests: returns
-    (applied_update, new_residuals).  grads/residuals: lists per worker."""
+    (applied_update, new_residuals).  grads/residuals: lists per worker.
+
+    ``quantize_int8`` reproduces the packed wire exactly as
+    ``wire_reduce`` ships it: each worker's send packed to ternary int8,
+    summed at integer width (int8 unless ``int32_accum``), unpacked and
+    averaged — integer sums are exact, so the sharded trainer must match
+    this bitwise.
+    """
+    n = len(grads_per_worker)
     sends = []
     new_res = []
     for g, r in zip(grads_per_worker, residuals_per_worker):
         s, nr = compress_tree(g, r, tau)
         sends.append(s)
         new_res.append(nr)
+    if quantize_int8:
+        packed = [tmap(lambda s: pack_int8(s, tau, n_workers=n,
+                                           int32_accum=int32_accum), sd)
+                  for sd in sends]
+        if int32_accum:
+            packed = [tmap(lambda p: p.astype(jnp.int32), pk)
+                      for pk in packed]
+        summed = packed[0]
+        for pk in packed[1:]:
+            summed = tmap(jnp.add, summed, pk)
+        avg = tmap(lambda p: unpack_int8(p, tau, n_workers_summed=n),
+                   summed)
+        return avg, new_res
     summed = sends[0]
     for s in sends[1:]:
         summed = tmap(jnp.add, summed, s)
-    avg = tmap(lambda x: x / len(grads_per_worker), summed)
+    avg = tmap(lambda x: x / n, summed)
     return avg, new_res

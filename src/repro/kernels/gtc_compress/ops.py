@@ -10,12 +10,7 @@ from repro.kernels.gtc_compress.kernel import TILE, gtc_compress_flat
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def gtc_compress(grad, residual, tau, *, interpret: bool = True):
-    """Tensor-shaped GTC compression via the TPU kernel.
-
-    grad/residual: same shape, any dims; tau: python float or 0-d array.
-    Returns (send, new_residual) shaped like grad, float32.
-    """
+def _gtc_compress_jit(grad, residual, tau, *, interpret: bool):
     shape = grad.shape
     n = grad.size
     npad = (-n) % TILE
@@ -24,3 +19,17 @@ def gtc_compress(grad, residual, tau, *, interpret: bool = True):
     t = jnp.asarray([tau], jnp.float32)
     send, newr = gtc_compress_flat(g, r, t, interpret=interpret)
     return send[:n].reshape(shape), newr[:n].reshape(shape)
+
+
+def gtc_compress(grad, residual, tau, *, interpret=None):
+    """Tensor-shaped GTC compression via the TPU kernel.
+
+    grad/residual: same shape, any dims; tau: python float or 0-d array.
+    Returns (send, new_residual) shaped like grad, float32.
+    ``interpret=None`` auto-selects: compiled on TPU, interpret mode
+    everywhere else — so callers (``distributed.gtc.compress_leaf``
+    behind ``GTCConfig.use_kernel``) need no backend switch of their own.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _gtc_compress_jit(grad, residual, tau, interpret=interpret)

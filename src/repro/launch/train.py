@@ -65,6 +65,10 @@ def main(argv=None):
     ap.add_argument("--gen-workers", type=int, default=None,
                     help="target-generation workers (ledgered disjoint "
                          "shard ranges; default: PipelineConfig's 2)")
+    ap.add_argument("--gtc-workers", type=int, default=None,
+                    help="sMBR sequence-training workers: >1 runs the "
+                         "stage through GTCShardMap (int8 wire over a "
+                         "mesh worker axis; default: PipelineConfig's 2)")
     ap.add_argument("--prefetch", type=int, default=None,
                     help="async feed depth for Trainer.fit "
                          "(0 = synchronous; default: PipelineConfig's 2)")
@@ -82,6 +86,8 @@ def main(argv=None):
         args.scale]
     if args.gen_workers is not None:
         scale.gen_workers = args.gen_workers
+    if args.gtc_workers is not None:
+        scale.gtc_workers = args.gtc_workers
     if args.prefetch is not None:
         scale.prefetch = args.prefetch
     pipe = SSLPipeline(scale, out_dir=args.out,

@@ -14,16 +14,26 @@ without ever holding more than its working set.
 
 Write protocol (``append_shard``): data files land first under
 wave-tagged names, the checksummed manifest entry commits via atomic
-rename, and only then are the superseded wave's files deleted.  The
-supersede is atomic **per shard**: a reader sees each shard's old
-complete wave or its new complete wave, never torn bytes, and a writer
-killed before the manifest commit leaves that shard's previous wave
-live.  Cross-shard consistency is the producer's job — a regeneration
-killed mid-wave durably leaves earlier shards at the new wave and later
-ones at the old, and ``pipeline.generate``'s resumable work ledger is
-what closes that window: the next invocation re-claims the unfinished
-ranges and completes the wave.  (A consumer that must pin one wave for
-a whole pass can check ``manifest`` wave tags; see ROADMAP.)
+rename, and the superseded entry moves to the manifest's **retired**
+list with its files left on disk.  The supersede is atomic **per
+shard**: a reader sees each shard's old complete wave or its new
+complete wave, never torn bytes, and a writer killed before the
+manifest commit leaves that shard's previous wave live.  Retired files
+are finally deleted by ``gc()`` — invoked on store open (also sweeping
+any staged-but-never-committed files a killed writer leaked) — which is
+what lets a consumer *pin* a wave for a whole sub-epoch
+(``train.data.distill_shard_source(pin_wave=True)`` snapshots the live
+entries and reads them via ``read_entry`` even while a regeneration
+supersedes them concurrently).  The gc-on-open contract assumes the
+single-writer-at-a-time discipline ``pipeline.generate``'s ledger
+provides: never open a store for writing while another writer is
+mid-stage.
+
+Cross-shard consistency is the producer's job — a regeneration killed
+mid-wave durably leaves earlier shards at the new wave and later ones
+at the old, and ``pipeline.generate``'s resumable work ledger is what
+closes that window: the next invocation re-claims the unfinished
+ranges and completes the wave.
 
 v1 stores (``shard_*.npz`` + ``meta.json``) migrate via ``migrate_v1``:
 existing archives are indexed in place (format tag "v1-npz", checksum
@@ -49,7 +59,8 @@ _V1_SHARD_RE = re.compile(r"shard_(\d+)\.npz$")
 class LogitStoreV2:
     """Manifest-backed sharded archive of (vals f16, idx i32) per frame."""
 
-    def __init__(self, root: str, *, k: int = 0, vocab: int = 0):
+    def __init__(self, root: str, *, k: int = 0, vocab: int = 0,
+                 gc_on_open: bool = True):
         self.root = root
         os.makedirs(os.path.join(root, _SHARD_DIR), exist_ok=True)
         if Manifest.exists(root):
@@ -69,6 +80,11 @@ class LogitStoreV2:
             self.manifest = Manifest(k=k, vocab=vocab)
         self.k = self.manifest.k or k
         self.vocab = self.manifest.vocab or vocab
+        if gc_on_open:
+            # sweep retired waves + orphans a killed writer left behind.
+            # gc_on_open=False is for readers deliberately racing a
+            # live writer (they must not delete its staged files).
+            self.gc()
 
     # -------------------------------------------------------------- write
 
@@ -99,14 +115,10 @@ class LogitStoreV2:
             checksum=file_checksum(files, self.root), format="v2")
 
     def _commit(self, entry: ShardEntry):
-        """Manifest swap + retirement of the superseded files."""
-        old = self.manifest.supersede(entry)
+        """Manifest swap; the superseded entry is *retired* (files kept
+        on disk for wave-pinned readers) and reclaimed by ``gc()``."""
+        self.manifest.supersede(entry)
         self.manifest.save(self.root)
-        if old is not None:
-            for rel in old.files.values():
-                path = os.path.join(self.root, rel)
-                if os.path.exists(path):
-                    os.remove(path)
 
     def append_shard(self, shard_id: int, vals, idx, utt_lens=None, *,
                      wave: int = 0) -> str:
@@ -136,9 +148,21 @@ class LogitStoreV2:
         recomputes the checksum first — it reads every byte, so it is
         the consumer's opt-in integrity gate, not the default.
         """
-        entry = self.manifest.entry(shard_id)
+        return self.read_entry(self.manifest.entry(shard_id),
+                               verify=verify)
+
+    def read_entry(self, entry: ShardEntry, *, verify: bool = False
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        """Read a shard through an explicit (possibly pinned) entry.
+
+        This is the wave-pinning read path: a consumer snapshots the
+        live entries at sub-epoch start and keeps reading *those* even
+        if a concurrent regeneration supersedes them — retired files
+        stay on disk until ``gc()``, so the pinned pass stays
+        wave-consistent instead of silently mixing teachers mid-epoch.
+        """
         if verify:
-            self.verify_shard(shard_id)
+            self.verify_entry(entry)
         if entry.format == "v1-npz":
             z = np.load(os.path.join(self.root, entry.files["npz"]))
             return z["vals"].astype(np.float16), z["idx"].astype(np.int32)
@@ -158,11 +182,18 @@ class LogitStoreV2:
     # ---------------------------------------------------------- integrity
 
     def verify_shard(self, shard_id: int):
-        entry = self.manifest.entry(shard_id)
-        got = file_checksum(entry.files, self.root)
+        self.verify_entry(self.manifest.entry(shard_id))
+
+    def verify_entry(self, entry: ShardEntry):
+        try:
+            got = file_checksum(entry.files, self.root)
+        except FileNotFoundError as e:
+            raise ShardCorruptionError(
+                f"shard {entry.shard_id} (wave {entry.wave}): data file "
+                f"missing ({e}) — a pinned entry read after gc()?") from e
         if got != entry.checksum:
             raise ShardCorruptionError(
-                f"shard {shard_id} (wave {entry.wave}): checksum "
+                f"shard {entry.shard_id} (wave {entry.wave}): checksum "
                 f"{got[:12]}... != manifest {entry.checksum[:12]}...")
 
     def verify(self) -> int:
@@ -170,6 +201,53 @@ class LogitStoreV2:
         for sid in self.manifest.shard_ids():
             self.verify_shard(sid)
         return len(self.manifest.shards)
+
+    # ----------------------------------------------- garbage collection
+
+    def gc(self) -> List[str]:
+        """Reclaim dead shard files; returns the relpaths removed.
+
+        Two populations die here (and only here — commits never delete):
+
+        * files of **retired** entries — waves superseded while a
+          pinned reader may still have been on them; by open time that
+          reader is gone, so the previous wave's files go, and the
+          manifest's retired list is cleared;
+        * **orphans** in ``shards/`` referenced by no live or retired
+          entry — staged by a writer that died between ``np.save`` and
+          the manifest commit, which would otherwise leak forever (a
+          resumed pass rewrites the same wave-tagged names, but an
+          abandoned one never would).
+
+        Runs on store open (``gc_on_open``).  Contract: no *other*
+        writer is mid-stage on this root — the generation ledger's
+        single-pass-at-a-time discipline.
+        """
+        live = {rel for e in self.manifest.shards.values()
+                for rel in e.files.values()}
+        removed = []
+
+        def _rm(rel: str):
+            path = os.path.join(self.root, rel)
+            if os.path.exists(path):
+                os.remove(path)
+                removed.append(rel)
+
+        # retired entries first: their files may live outside shards/
+        # (v1-npz archives sit at the store root)
+        for entry in self.manifest.retired:
+            for rel in entry.files.values():
+                if rel not in live:
+                    _rm(rel)
+        sdir = os.path.join(self.root, _SHARD_DIR)
+        for fname in sorted(os.listdir(sdir)):
+            rel = os.path.join(_SHARD_DIR, fname)
+            if rel not in live:
+                _rm(rel)
+        if self.manifest.retired:
+            self.manifest.retired = []
+            self.manifest.save(self.root)
+        return removed
 
     # ------------------------------------------------------------ queries
 

@@ -3,11 +3,19 @@
 The manifest is the store's single source of truth: a shard exists iff
 the manifest names it.  Shard data files are written first (to
 wave-tagged names that never collide with the live entries), then the
-manifest is swapped atomically (`os.replace`), then retired files are
-deleted — so a reader holding the old manifest always sees intact files,
-and a writer killed at any point leaves each shard's old or new entry
-fully live, never torn bytes (cross-shard wave consistency is the
-producer's ledger's job — see repro.pipeline.generate).
+manifest is swapped atomically (`os.replace`) — so a reader holding the
+old manifest always sees intact files, and a writer killed at any point
+leaves each shard's old or new entry fully live, never torn bytes
+(cross-shard wave consistency is the producer's ledger's job — see
+repro.pipeline.generate).
+
+Superseded entries are *retired*, not deleted: they move to the
+manifest's ``retired`` list with their files left on disk, so a reader
+that pinned a wave at sub-epoch start (``train.data
+.distill_shard_source(pin_wave=True)``) keeps reading consistent
+targets while a new teacher wave lands.  ``LogitStoreV2.gc()`` —
+invoked on store open — is what finally deletes retired files, along
+with any staged-but-never-committed files a killed writer left behind.
 
 Each entry records the shard's frame count, k, vocab, wave (teacher
 generation tag — higher wave supersedes), on-disk file names, storage
@@ -80,7 +88,8 @@ class Manifest:
     k: int = 0
     vocab: int = 0
     shards: Dict[int, ShardEntry] = field(default_factory=dict)
-    version: int = MANIFEST_VERSION
+    retired: list = field(default_factory=list)   # superseded ShardEntry,
+    version: int = MANIFEST_VERSION               # files pending gc()
 
     FILENAME = "manifest.json"
 
@@ -103,7 +112,9 @@ class Manifest:
                              f"!= {MANIFEST_VERSION}")
         shards = {int(sid): ShardEntry.from_json(e)
                   for sid, e in d.get("shards", {}).items()}
-        return cls(k=d["k"], vocab=d["vocab"], shards=shards)
+        retired = [ShardEntry.from_json(e) for e in d.get("retired", [])]
+        return cls(k=d["k"], vocab=d["vocab"], shards=shards,
+                   retired=retired)
 
     def save(self, root: str):
         """Atomic commit: full write to a temp file, then os.replace.
@@ -114,7 +125,8 @@ class Manifest:
         payload = {"version": self.version, "k": self.k,
                    "vocab": self.vocab,
                    "shards": {str(sid): e.to_json()
-                              for sid, e in sorted(self.shards.items())}}
+                              for sid, e in sorted(self.shards.items())},
+                   "retired": [e.to_json() for e in self.retired]}
         tmp = self.path_for(root) + ".tmp"
         with open(tmp, "w") as f:
             json.dump(payload, f, indent=1)
@@ -141,7 +153,9 @@ class Manifest:
     # -------------------------------------------------------------- update
 
     def supersede(self, entry: ShardEntry) -> Optional[ShardEntry]:
-        """Install `entry`, returning the retired predecessor (if any).
+        """Install `entry`, moving the predecessor (if any) onto the
+        ``retired`` list — its files stay on disk for readers that
+        pinned the old wave, until ``LogitStoreV2.gc()``.
 
         Same-wave rewrites are allowed (shard contents are deterministic,
         so an idempotent retry rewrites in place); an *older* wave is a
@@ -155,4 +169,6 @@ class Manifest:
         self.shards[entry.shard_id] = entry
         if old is not None and old.files == entry.files:
             return None                     # in-place rewrite: nothing retired
+        if old is not None:
+            self.retired.append(old)
         return old

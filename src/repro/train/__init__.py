@@ -1,7 +1,8 @@
 """Unified Trainer API (ISSUE 2) + the data-plane feed (ISSUE 3).
 
   TrainState            — params + opt + step + rng + strategy state
-  DistributedStrategy   — Local / BMUFVmap / BMUFShardMap / GTC
+  DistributedStrategy   — Local / BMUFVmap / BMUFShardMap / GTC /
+                          GTCShardMap
   DataSource            — iterables of TrainBatch (epoch_source,
                           distill_shard_source, scheduled_source, chain);
                           compose with repro.pipeline.PrefetchingSource
@@ -21,13 +22,14 @@ from repro.train.metrics import (JsonlSink, ListSink, MetricsSink,
                                  TeeSink)
 from repro.train.state import TrainState
 from repro.train.strategies import (GTC, BMUFShardMap, BMUFVmap,
-                                    DistributedStrategy, Local,
-                                    init_opt, make_sgd_step)
+                                    DistributedStrategy, GTCShardMap,
+                                    Local, init_opt, make_sgd_step)
 from repro.train.trainer import Trainer
 
 __all__ = [
     "TrainState", "Trainer", "TrainBatch", "DataSource",
     "DistributedStrategy", "Local", "BMUFVmap", "BMUFShardMap", "GTC",
+    "GTCShardMap",
     "make_sgd_step", "init_opt",
     "epoch_source", "distill_shard_source", "scheduled_source", "chain",
     "PrefetchingSource", "Schedule",

@@ -58,17 +58,36 @@ def epoch_source(batches_fn: Callable[[int], Iterable[dict]],
 
 def distill_shard_source(batches, store, lo: int, hi: int, lr,
                          loss: str = "distill_topk", *,
-                         verify: bool = False) -> Iterator[TrainBatch]:
+                         verify: bool = False,
+                         pin_wave: bool = False) -> Iterator[TrainBatch]:
     """Unlabeled batches [lo, hi) joined with their LogitStore shards
     (shard i holds batch i's teacher top-k — the trainer-aligned layout
     stage_targets writes).  Works against v1 (``core.logit_store``) and
     v2 (``repro.store``) stores alike; with a v2 store, ``verify=True``
     checksums each shard before it is fed (the decode-side integrity
     gate — pair with a PrefetchingSource so it runs off the hot path).
+
+    ``pin_wave=True`` (v2 stores) snapshots the live manifest entries
+    when iteration starts and reads through *those* for the whole
+    sub-epoch: a teacher regeneration superseding shards mid-epoch
+    cannot silently switch this pass onto new-wave targets half way
+    through — retired files stay on disk until the store's next
+    ``gc()``, so the pinned reads keep resolving.  (A mid-wave-killed
+    regeneration may still leave the *snapshot itself* mixed across
+    waves; closing that is the generation ledger's job.)
     """
+    entries = None
+    if pin_wave and hasattr(store, "manifest"):
+        # taken lazily, at first next(): scheduled_source builds each
+        # sub-epoch's source up front, but the pin belongs to the
+        # moment the sub-epoch starts consuming
+        entries = {bi: store.manifest.entry(bi)
+                   for bi in range(lo, min(hi, len(batches)))}
     for bi in range(lo, min(hi, len(batches))):
         b = batches[bi]
-        if verify:
+        if entries is not None:
+            vals, idx = store.read_entry(entries[bi], verify=verify)
+        elif verify:
             vals, idx = store.read_shard(bi, verify=True)
         else:
             vals, idx = store.read_shard(bi)

@@ -12,7 +12,10 @@ instead of a forked code path:
                    (the production path in distributed/bmuf.py)
   GTC            — Strom threshold-compressed SGD with error feedback
                    (paper §2/§3.4's 16-GPU trainer; works with any loss,
-                   including sMBR)
+                   including sMBR), single-process form
+  GTCShardMap    — the same math with the worker axis sharded over mesh
+                   axes: per-worker residuals, int8-packed wire psum
+                   (the production path in distributed/gtc.py)
 
 A strategy exposes:
 
@@ -137,10 +140,13 @@ class GTC:
     """Threshold-compressed SGD with error feedback (Strom 2015).
 
     Single-process form: grads are compressed against the carried
-    residual exactly as ``gtc_lib.compress_tree`` and the *sent* sparse
-    update drives the optimizer — the accuracy-relevant math of the
-    16-GPU trainer, loss-agnostic (CE, distill, sMBR).  Multi-worker
-    wire exchange lives in ``gtc_lib.make_gtc_train_step`` (shard_map).
+    residual by ``gtc_lib.compress_tree`` (the shared code path — the
+    Pallas kernel behind ``cfg.use_kernel``) and the update ships
+    through ``gtc_lib.wire_reduce``, which at one worker is a
+    pack/unpack round-trip (bitwise identity on ternary sends) — so the
+    arithmetic is literally the multi-worker wire's.  The accuracy-
+    relevant math of the 16-GPU trainer, loss-agnostic (CE, distill,
+    sMBR).  The multi-worker exchange is ``GTCShardMap``.
     """
 
     microbatches = 1
@@ -148,6 +154,10 @@ class GTC:
     def __init__(self, cfg: gtc_lib.GTCConfig = None, *,
                  optimizer: str = "momentum", clip: float = 1.0):
         self.cfg = cfg or gtc_lib.GTCConfig(n_workers=1)
+        if self.cfg.n_workers != 1:
+            raise ValueError(
+                f"GTC is the single-process strategy; cfg.n_workers="
+                f"{self.cfg.n_workers} needs GTCShardMap")
         self.optimizer = optimizer
         self.clip = clip
 
@@ -163,7 +173,7 @@ class GTC:
     def make_update(self, loss_fn):
         upd = momentum_update if self.optimizer == "momentum" \
             else adam_update
-        tau = self.cfg.tau
+        cfg = self.cfg
         clip = self.clip
 
         def update(state: TrainState, batch, lr):
@@ -175,11 +185,126 @@ class GTC:
                 grads, gn = clip_by_global_norm(grads, clip)
                 metrics["grad_norm"] = gn
             send, res = gtc_lib.compress_tree(
-                grads, state.strategy_state["residual"], tau)
-            params, opt = upd(state.params, send, state.opt_state, lr=lr)
-            metrics["gtc_density"] = gtc_lib.density(send, tau)
+                grads, state.strategy_state["residual"], cfg.tau,
+                use_kernel=cfg.use_kernel)
+            applied = gtc_lib.wire_reduce(send, cfg)
+            params, opt = upd(state.params, applied, state.opt_state,
+                              lr=lr)
+            metrics["gtc_density"] = gtc_lib.density(applied, cfg.tau)
             return state.replace(params=params, opt_state=opt,
                                  strategy_state={"residual": res},
+                                 step=state.step + 1), metrics
+
+        return update
+
+
+class GTCShardMap:
+    """Multi-worker GTC: the worker axis sharded over mesh axes.
+
+    The paper's 16-GPU sequence trainer inside the unified Trainer:
+    each update consumes ``n_workers`` microbatches (one per worker,
+    stacked on a leading W dim and sharded over the mesh), every worker
+    compresses its clipped grads against its own carried error-feedback
+    residual (``TrainState.strategy_state`` — per-worker, W-stacked),
+    and the wire is ``gtc_lib.wire_reduce``: int8-packed sends, integer
+    accumulation (int8-exact to 127 workers, int32 beyond), one psum
+    per leaf.  Params and optimizer state stay replicated — synchronous
+    SGD, every worker applies the same averaged update.
+
+    On a 1-device mesh with n_workers=1 and a deterministic loss this
+    is bitwise-equal to the single-process ``GTC`` strategy (pinned in
+    tests) — the BMUFVmap/BMUFShardMap validation story, repeated for
+    the second of the paper's two distributed trainers.  Stochastic
+    losses get per-(update, worker) folded keys (global worker index,
+    folded outside the shard_map), matching the BMUF folding scheme.
+    """
+
+    def __init__(self, cfg: gtc_lib.GTCConfig, mesh, *,
+                 worker_axes=("data",), optimizer: str = "momentum",
+                 clip: float = 1.0):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.worker_axes = worker_axes
+        self.optimizer = optimizer
+        self.clip = clip
+
+    @property
+    def microbatches(self) -> int:
+        return self.cfg.n_workers
+
+    def init_opt(self, params):
+        return init_opt(params, self.optimizer)
+
+    def init_state(self, params):
+        return gtc_lib.gtc_init(params, self.cfg)
+
+    def place(self, state: TrainState) -> TrainState:
+        """Lay a (fresh or resumed) TrainState out on the mesh the way
+        the sharded step returns it — params/opt replicated, per-worker
+        residuals sharded over the worker axis — so the first update
+        compiles the same executable as every later one (the Trainer
+        calls this from init_state and after a resume load)."""
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        rep = NamedSharding(self.mesh, P())
+        wrk = NamedSharding(self.mesh, self._wspec())
+        return state.replace(
+            params=jax.device_put(state.params, rep),
+            opt_state=jax.device_put(state.opt_state, rep),
+            strategy_state=jax.device_put(state.strategy_state, wrk),
+            step=jax.device_put(state.step, rep),
+            rng=jax.device_put(state.rng, rep))
+
+    def _wspec(self):
+        from jax.sharding import PartitionSpec as P
+        # a worker axis of size 1 canonicalizes to replicated under
+        # GSPMD; placing it that way keeps first-call == steady-state
+        if all(self.mesh.shape[a] == 1 for a in self.worker_axes):
+            return P()
+        return P(self.worker_axes if len(self.worker_axes) > 1
+                 else self.worker_axes[0])
+
+    def stack(self, group):
+        return tmap(lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]),
+                    *group)
+
+    def _grad_transform(self):
+        clip = self.clip
+        if not clip:
+            return None
+
+        def transform(grads):
+            grads, gn = clip_by_global_norm(grads, clip)
+            return grads, {"grad_norm": gn}
+
+        return transform
+
+    def make_update(self, loss_fn):
+        upd = momentum_update if self.optimizer == "momentum" \
+            else adam_update
+        step = gtc_lib.make_sharded_gtc_train_step(
+            loss_fn, upd, self.cfg, self.mesh,
+            worker_axes=self.worker_axes,
+            grad_transform=self._grad_transform())
+
+        from jax.sharding import NamedSharding
+        wrk = NamedSharding(self.mesh, self._wspec())
+
+        def update(state: TrainState, batches, lr):
+            rng = jax.random.fold_in(state.rng, state.step)
+            params, opt, gstate, ms = step(
+                state.params, state.opt_state, state.strategy_state,
+                batches, lr, rng)
+            # pin the residual's output sharding to the worker spec: on
+            # a 1-axis-size mesh GSPMD would otherwise canonicalize it
+            # to replicated, and the next call would miss the jit cache
+            gstate = tmap(
+                lambda r: jax.lax.with_sharding_constraint(r, wrk), gstate)
+            # metrics arrive (W,)-shaped from the sharded worker slice
+            metrics = tmap(jnp.mean, ms)
+            return state.replace(params=params, opt_state=opt,
+                                 strategy_state=gstate,
                                  step=state.step + 1), metrics
 
         return update

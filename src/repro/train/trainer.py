@@ -73,11 +73,19 @@ class Trainer:
     # ------------------------------------------------------------- state
 
     def init_state(self, params, *, seed: int = 0) -> TrainState:
-        return TrainState(params=params,
-                          opt_state=self.strategy.init_opt(params),
-                          strategy_state=self.strategy.init_state(params),
-                          step=jnp.zeros((), jnp.int32),
-                          rng=jax.random.key(seed))
+        state = TrainState(params=params,
+                           opt_state=self.strategy.init_opt(params),
+                           strategy_state=self.strategy.init_state(params),
+                           step=jnp.zeros((), jnp.int32),
+                           rng=jax.random.key(seed))
+        return self._place(state)
+
+    def _place(self, state: TrainState) -> TrainState:
+        """Strategies that shard their state over a mesh (GTCShardMap)
+        lay it out here so the first update hits the same executable as
+        the steady state — identity for everything else."""
+        place = getattr(self.strategy, "place", None)
+        return state if place is None else place(state)
 
     def _save(self, state: TrainState, consumed: int):
         self.checkpoint.save(int(state.step), state.to_dict(),
@@ -92,7 +100,8 @@ class Trainer:
         except FileNotFoundError:
             return None
         meta = self.checkpoint.load_meta(step) or {}
-        return TrainState.from_dict(tree), int(meta.get("consumed", 0))
+        return (self._place(TrainState.from_dict(tree)),
+                int(meta.get("consumed", 0)))
 
     # --------------------------------------------------------------- fit
 

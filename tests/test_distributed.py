@@ -182,6 +182,42 @@ def test_gtc_int8_roundtrip():
                                np.asarray(s), atol=1e-7)
 
 
+def test_pack_int8_overflow_guard():
+    """Summing > 127 ternary messages at int8 width would wrap; pack
+    refuses to build that wire unless the accumulation widens."""
+    s = jnp.zeros((4,), jnp.float32)
+    G.pack_int8(s, 1e-3, n_workers=127)               # fits
+    with pytest.raises(ValueError, match="int32_accum"):
+        G.pack_int8(s, 1e-3, n_workers=128)
+    G.pack_int8(s, 1e-3, n_workers=128, int32_accum=True)  # widened: fine
+    with pytest.raises(ValueError):
+        G.wire_reduce({"w": s}, G.GTCConfig(tau=1e-3, n_workers=200))
+    G.wire_reduce({"w": s}, G.GTCConfig(tau=1e-3, n_workers=200,
+                                        int32_accum=True))
+
+
+def test_unpack_int8_averages_summed_workers():
+    """unpack_int8 honors n_workers_summed: a summed wire of W packed
+    messages unpacks to the worker-averaged update."""
+    tau = 0.5
+    summed = jnp.asarray([2, -2, 1, 0], jnp.int8)     # sum of 2 messages
+    out = G.unpack_int8(summed, tau, n_workers_summed=2)
+    np.testing.assert_allclose(np.asarray(out),
+                               [0.5, -0.5, 0.25, 0.0], atol=1e-7)
+
+
+def test_wire_reduce_single_worker_is_identity_on_sends():
+    """The degenerate wire (pack -> unpack, no axes) is bitwise-identity
+    on ternary sends — what lets the single-process GTC strategy share
+    the multi-worker arithmetic."""
+    tau = 1e-3
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(33,)) * tau, jnp.float32)
+    s, _ = G.compress_leaf(g, jnp.zeros((33,)), tau)
+    out = G.wire_reduce({"w": s}, G.GTCConfig(tau=tau, n_workers=1))
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(s))
+
+
 def test_gtc_ring_converges_to_mean():
     """Repeated rounds on a constant gradient: cumulative applied update
     approaches rounds*mean(g) — 1-bit/threshold quantization delays but
@@ -233,6 +269,137 @@ def test_gtc_strategy_matches_compress_tree():
     np.testing.assert_allclose(
         np.asarray(state.strategy_state["residual"]["w"]),
         np.asarray(ref_res["w"]), rtol=1e-6)
+
+
+# -------------------------------------------------- GTC sharded (tentpole)
+
+def lin_loss(params, batch):
+    """Linear probe: grad == batch["c"] bitwise (no float reassociation
+    between eager references and the jitted step) — isolates the
+    exchange arithmetic for the bitwise comparisons."""
+    l = jnp.sum(params["w"] * batch["c"])
+    return l, {"loss": l}
+
+
+def _stack(dicts):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *dicts)
+
+
+@pytest.mark.parametrize("n_workers,quantize",
+                         [(2, True), (4, True), (2, False)])
+def test_sharded_gtc_wire_matches_simulate_bitwise(n_workers, quantize):
+    """The tentpole pin: make_sharded_gtc_train_step's applied update
+    and per-worker residuals == simulate_gtc_round, BITWISE, for both
+    the float and the packed-int8 wire (integer accumulation is exact,
+    so the shard_map plumbing must add nothing)."""
+    tau = 1e-3
+    cfg = G.GTCConfig(tau=tau, n_workers=n_workers, quantize_int8=quantize)
+    mesh = jax.make_mesh((1,), ("data",))
+    capture = lambda p, u, o, lr: (u, o)       # "params" := applied update
+    step = jax.jit(G.make_sharded_gtc_train_step(lin_loss, capture, cfg,
+                                                 mesh))
+    params = {"w": jnp.zeros((9,))}
+    state = {"residual": {"w": jnp.zeros((n_workers, 9))}}
+    ref_res = [{"w": jnp.zeros((9,))} for _ in range(n_workers)]
+    rng = np.random.default_rng(11)
+    for it in range(4):
+        cs = [{"c": jnp.asarray(rng.normal(size=(9,)) * tau, jnp.float32)}
+              for _ in range(n_workers)]
+        upd, _, state, ms = step(params, None, state, _stack(cs), 0.05)
+        ref_upd, ref_res = G.simulate_gtc_round(
+            [{"w": c["c"]} for c in cs], ref_res, tau,
+            quantize_int8=quantize)
+        np.testing.assert_array_equal(np.asarray(upd["w"]),
+                                      np.asarray(ref_upd["w"]),
+                                      err_msg=f"update, round {it}")
+        for w in range(n_workers):
+            np.testing.assert_array_equal(
+                np.asarray(state["residual"]["w"][w]),
+                np.asarray(ref_res[w]["w"]),
+                err_msg=f"residual, worker {w}, round {it}")
+
+
+def test_gtc_shardmap_w1_bitwise_equals_gtc_strategy():
+    """GTCShardMap at n_workers=1 on a 1-device mesh == the
+    single-process GTC strategy, bitwise on params AND residual — the
+    BMUFVmap/BMUFShardMap validation story for the second trainer."""
+    from repro.train import GTC as GTCStrategy, GTCShardMap, Trainer, \
+        TrainBatch
+    x, y = _problem(n=32)
+    batch = {"x": x, "y": y}
+    params = {"w": jnp.zeros((8,))}
+    tau = 1e-3
+    src = lambda: [TrainBatch(batch, 0.05, "quad") for _ in range(5)]
+
+    tr1 = Trainer(GTCStrategy(G.GTCConfig(tau=tau, n_workers=1), clip=0.0),
+                  {"quad": quad_loss})
+    s1 = tr1.fit(tr1.init_state(params), src(), resume=False)
+
+    mesh = jax.make_mesh((1,), ("data",))
+    trs = Trainer(GTCShardMap(G.GTCConfig(tau=tau, n_workers=1), mesh,
+                              clip=0.0), {"quad": quad_loss})
+    ss = trs.fit(trs.init_state(params), src(), resume=False)
+    assert int(s1.step) == int(ss.step) == 5
+    np.testing.assert_array_equal(np.asarray(s1.params["w"]),
+                                  np.asarray(ss.params["w"]))
+    np.testing.assert_array_equal(
+        np.asarray(s1.strategy_state["residual"]["w"]),
+        np.asarray(ss.strategy_state["residual"]["w"][0]))
+
+
+def test_sharded_gtc_residual_conservation():
+    """Error feedback conserves information across workers and rounds:
+    sum of everything shipped (W * the averaged updates) plus the final
+    residuals equals the sum of all gradients — compression delays,
+    never drops."""
+    tau = 2e-3
+    W, D, rounds = 4, 16, 6
+    cfg = G.GTCConfig(tau=tau, n_workers=W)     # int8 wire, /4 is exact
+    mesh = jax.make_mesh((1,), ("data",))
+    capture = lambda p, u, o, lr: (u, o)
+    step = jax.jit(G.make_sharded_gtc_train_step(lin_loss, capture, cfg,
+                                                 mesh))
+    params = {"w": jnp.zeros((D,))}
+    state = {"residual": {"w": jnp.zeros((W, D))}}
+    rng = np.random.default_rng(3)
+    total_g = np.zeros(D)
+    total_sent = np.zeros(D)
+    for _ in range(rounds):
+        cs = [{"c": jnp.asarray(rng.normal(size=(D,)) * tau, jnp.float32)}
+              for _ in range(W)]
+        upd, _, state, _ = step(params, None, state, _stack(cs), 0.05)
+        total_g += sum(np.asarray(c["c"], np.float64) for c in cs)
+        total_sent += W * np.asarray(upd["w"], np.float64)
+    final_res = np.asarray(state["residual"]["w"], np.float64).sum(0)
+    np.testing.assert_allclose(total_sent + final_res, total_g, atol=1e-5)
+
+
+def test_gtc_strategy_kernel_path_matches_ref():
+    """GTCConfig(use_kernel=True) routes compression through the Pallas
+    kernel (interpret mode on CPU) and matches the ref path to float32
+    round-off.  (The kernel itself is element-exact vs the ref oracle —
+    test_kernels pins that; across a *full jitted update* the pallas_call
+    boundary blocks the elementwise fusion XLA applies to the inline
+    ref, so the carried residual can drift by ~1 ulp.)"""
+    from repro.train import GTC as GTCStrategy, Trainer, TrainBatch
+    x, y = _problem(n=32)
+    batch = {"x": x, "y": y}
+    params = {"w": jnp.zeros((8,))}
+    src = lambda: [TrainBatch(batch, 0.05, "quad") for _ in range(3)]
+    outs = []
+    for use_kernel in (False, True):
+        tr = Trainer(GTCStrategy(G.GTCConfig(tau=1e-3, n_workers=1,
+                                             use_kernel=use_kernel),
+                                 clip=0.0), {"quad": quad_loss})
+        st = tr.fit(tr.init_state(params), src(), resume=False)
+        outs.append(st)
+    np.testing.assert_allclose(np.asarray(outs[0].params["w"]),
+                               np.asarray(outs[1].params["w"]),
+                               rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(outs[0].strategy_state["residual"]["w"]),
+        np.asarray(outs[1].strategy_state["residual"]["w"]),
+        rtol=1e-5, atol=1e-6)
 
 
 def test_adaptive_tau_density():

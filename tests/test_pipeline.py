@@ -294,6 +294,53 @@ def test_prefetch_propagates_producer_error():
         next(it)
 
 
+def test_distill_source_pin_wave_survives_mid_epoch_supersede(tmp_path):
+    """The wave-consistency fix: a pinned source snapshots its shards'
+    manifest entries at iteration start, so a teacher regeneration
+    superseding shards *mid-sub-epoch* cannot switch the pass onto
+    new-wave targets half way through — while an unpinned source
+    silently mixes the two waves (the bug)."""
+    batches = _batches(4)
+    store = LogitStoreV2(str(tmp_path), k=K, vocab=V)
+    old = {}
+    rng = np.random.default_rng(5)
+    for j in range(4):
+        vals = rng.normal(size=(2, 5, K)).astype(np.float32)
+        vals = vals - vals.max(-1, keepdims=True)
+        idx = rng.integers(0, V, (2, 5, K)).astype(np.int32)
+        store.append_shard(j, vals, idx)
+        old[j] = idx
+
+    def supersede_all():
+        for j in range(4):
+            vals = np.zeros((2, 5, K), np.float32)
+            idx = np.full((2, 5, K), j % V, np.int32)   # distinctive
+            store.append_shard(j, vals, idx, wave=1)
+
+    # pinned: iterate two shards, regenerate everything, keep iterating
+    # — every batch still carries wave-0 targets
+    it = iter(distill_shard_source(batches, store, 0, 4, 0.1,
+                                   pin_wave=True, verify=True))
+    got = [next(it), next(it)]
+    supersede_all()
+    got += list(it)
+    for j, tb in enumerate(got):
+        np.testing.assert_array_equal(np.asarray(tb.data["topk_idx"]),
+                                      old[j], err_msg=f"shard {j}")
+
+    # unpinned (the old behavior): the same interleaving mixes waves
+    it = iter(distill_shard_source(batches, store, 0, 4, 0.1))
+    first = next(it)
+    # a third wave lands mid-epoch
+    for j in range(4):
+        store.append_shard(j, np.zeros((2, 5, K), np.float32),
+                           np.full((2, 5, K), (j + 7) % V, np.int32),
+                           wave=2)
+    rest = list(it)
+    assert np.asarray(first.data["topk_idx"]).max() != \
+        np.asarray(rest[0].data["topk_idx"]).max()
+
+
 def test_prefetch_early_close_stops_producer():
     produced = []
 

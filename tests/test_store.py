@@ -78,29 +78,39 @@ def test_checksum_rejects_corrupted_shard(tmp_path):
 def test_wave_supersede_is_atomic(tmp_path):
     """A regenerated wave replaces a shard atomically: files staged
     without a manifest commit are invisible (killed writer), the commit
-    swaps the entry in one rename, and only then are stale files
-    retired."""
+    swaps the entry in one rename, and stale files are *retired* —
+    kept on disk for wave-pinned readers until the next gc()."""
     store = LogitStoreV2(str(tmp_path), k=4, vocab=50)
     v0, i0 = _shard(3)
     store.append_shard(0, v0, i0)
     old_files = dict(store.manifest.entry(0).files)
 
-    # stage wave-1 files but "die" before the manifest commit
+    # stage wave-1 files but "die" before the manifest commit; the
+    # racing readers disable gc-on-open — a concurrent open while a
+    # writer is mid-stage is outside the gc contract (it would sweep
+    # the staged-but-uncommitted files as orphans)
     v1_, i1_ = _shard(4)
     staged = store._write_shard_files(0, v1_, i1_, wave=1)
-    reader = LogitStoreV2(str(tmp_path))        # fresh open = fresh manifest
+    reader = LogitStoreV2(str(tmp_path), gc_on_open=False)
     got_v, got_i = reader.read_shard(0, verify=True)
     np.testing.assert_array_equal(np.asarray(got_i), i0)  # still wave 0
     assert reader.manifest.entry(0).wave == 0
 
-    # commit: readers now see wave 1, wave-0 files are retired
+    # commit: readers now see wave 1; wave-0 files survive as retired
+    # (a pinned reader may still be on them) until gc reclaims them
     store._commit(staged)
-    reader2 = LogitStoreV2(str(tmp_path))
+    reader2 = LogitStoreV2(str(tmp_path), gc_on_open=False)
     got_v2, got_i2 = reader2.read_shard(0, verify=True)
     np.testing.assert_array_equal(np.asarray(got_i2), i1_)
     assert reader2.manifest.entry(0).wave == 1
     for rel in old_files.values():
+        assert os.path.exists(os.path.join(str(tmp_path), rel))
+    removed = store.gc()
+    assert sorted(removed) == sorted(old_files.values())
+    for rel in old_files.values():
         assert not os.path.exists(os.path.join(str(tmp_path), rel))
+    # gc cleared the retired list durably
+    assert LogitStoreV2(str(tmp_path)).manifest.retired == []
 
 
 def test_stale_wave_rejected_and_same_wave_idempotent(tmp_path):
@@ -144,6 +154,9 @@ def test_v1_migration_roundtrip(tmp_path):
     store.append_shard(1, v_new, i_new, wave=1)
     entry = store.manifest.entry(1)
     assert entry.format == "v2" and entry.wave == 1
+    # the npz is retired (still readable by a pinned consumer) until gc
+    assert os.path.exists(os.path.join(root, "shard_00001.npz"))
+    store.gc()
     assert not os.path.exists(os.path.join(root, "shard_00001.npz"))
     got_v, got_i = store.read_shard(1, verify=True)
     np.testing.assert_array_equal(np.asarray(got_i), i_new)
@@ -159,3 +172,74 @@ def test_manifest_atomic_write_survives_garbage_tmp(tmp_path):
         f.write("{not json")
     again = LogitStoreV2(str(tmp_path))
     assert again.shards() == [0]
+
+
+# -------------------------------------------------------------------- gc
+
+def test_gc_reclaims_writer_killed_mid_stage(tmp_path):
+    """A writer killed between staging the shard .npy files and the
+    manifest commit leaks unreferenced wave files; gc() on the next
+    store open removes exactly those orphans and nothing live."""
+    store = LogitStoreV2(str(tmp_path), k=4, vocab=50)
+    store.append_shard(0, *_shard(0))
+    live_files = dict(store.manifest.entry(0).files)
+
+    # "kill" a wave-1 writer mid-stage: files on disk, no manifest entry
+    staged = store._write_shard_files(1, *_shard(1), wave=1)
+    for rel in staged.files.values():
+        assert os.path.exists(os.path.join(str(tmp_path), rel))
+
+    reopened = LogitStoreV2(str(tmp_path))       # gc_on_open sweeps
+    for rel in staged.files.values():
+        assert not os.path.exists(os.path.join(str(tmp_path), rel))
+    for rel in live_files.values():
+        assert os.path.exists(os.path.join(str(tmp_path), rel))
+    reopened.verify()                            # live shard untouched
+
+
+def test_gc_on_open_reclaims_retired_wave(tmp_path):
+    """Files of a superseded wave survive the commit (pinned readers)
+    but die at the next open's gc."""
+    store = LogitStoreV2(str(tmp_path), k=4, vocab=50)
+    store.append_shard(0, *_shard(0))
+    wave0_files = dict(store.manifest.entry(0).files)
+    store.append_shard(0, *_shard(1), wave=1)    # supersede -> retire
+    assert len(store.manifest.retired) == 1
+    for rel in wave0_files.values():
+        assert os.path.exists(os.path.join(str(tmp_path), rel))
+
+    again = LogitStoreV2(str(tmp_path))
+    for rel in wave0_files.values():
+        assert not os.path.exists(os.path.join(str(tmp_path), rel))
+    assert again.manifest.retired == []
+    again.verify()
+
+
+def test_gc_idempotent_and_empty_on_clean_store(tmp_path):
+    store = LogitStoreV2(str(tmp_path), k=4, vocab=50)
+    store.append_shard(0, *_shard(0))
+    assert store.gc() == []
+    assert store.gc() == []
+
+
+# ------------------------------------------------------- wave pinning
+
+def test_read_entry_pins_superseded_wave(tmp_path):
+    """A reader holding a pre-supersede entry keeps reading the old
+    wave's bytes (deferred retirement), and its checksum still
+    verifies; after gc() the pinned read fails loudly, not silently."""
+    store = LogitStoreV2(str(tmp_path), k=4, vocab=50)
+    v0, i0 = _shard(7)
+    store.append_shard(0, v0, i0)
+    pinned = store.manifest.entry(0)
+
+    v1_, i1_ = _shard(8)
+    store.append_shard(0, v1_, i1_, wave=1)      # concurrent regeneration
+    got_v, got_i = store.read_entry(pinned, verify=True)
+    np.testing.assert_array_equal(np.asarray(got_i), i0)   # old wave
+    live_v, live_i = store.read_shard(0)
+    np.testing.assert_array_equal(np.asarray(live_i), i1_)  # new wave
+
+    store.gc()
+    with pytest.raises(ShardCorruptionError):
+        store.read_entry(pinned, verify=True)
