@@ -1,19 +1,30 @@
-"""Serving load generator: naive per-utterance loop vs the batched engine.
+"""Serving load generator: AM batch inference + token-LM decode.
 
-The paper's target-generation system is throughput-bound batch inference
-(§3.2.2); this records the speedup of the engine's bucketed batching over
-the naive utterance-at-a-time loop as a *number*, not a claim:
+Two measured sections, one JSON record:
+
+**AM** — naive per-utterance loop vs the batched engine.  The paper's
+target-generation system is throughput-bound batch inference (§3.2.2);
+this records the speedup of the engine's bucketed batching over the
+naive utterance-at-a-time loop as a *number*, not a claim.  Both paths
+run the same bidirectional teacher over the same synthetic corpus and
+emit the same top-k logits; the naive baseline is honest (one XLA
+program, batch 1).  Also reports ``padding_efficiency`` over exactly
+the FormedBatches the engine ran (dead tail rows included).
+
+**Decode** — the round-batched engine (equal-prompt-length generation
+rounds, per-step host syncs) vs the continuous batcher (per-row cache
+positions, mid-flight admit/retire, one host sync per window) on a
+ragged-prompt workload.  Asserts continuous >= ``--assert-speedup`` x
+round (the tier2-serve CI gate) and that both engines' outputs are
+token-identical to sequential (one-request-at-a-time) decoding.
 
   PYTHONPATH=src python benchmarks/serve_bench.py
   PYTHONPATH=src python benchmarks/serve_bench.py --n-utts 128 --policy latency
 
-Both paths run the same bidirectional teacher over the same synthetic
-corpus and emit the same top-k logits.  The naive baseline is honest: one
-XLA program (every utterance padded to the corpus max bucket), batch 1 —
-its weakness is wasted padding frames and no cross-utterance batching,
-which is exactly what the engine fixes.  Reported:
+Reported:
 
-  frames/sec   — valid (unpadded) frames per wall-clock second
+  frames/sec   — valid (unpadded) frames per wall-clock second (AM)
+  tok/sec      — generated tokens per wall-clock second (decode)
   p50/p95 ms   — per-utterance completion latency
 """
 from __future__ import annotations
@@ -32,7 +43,8 @@ from repro.core.logit_store import topk_compress
 from repro.data import FeatureConfig, SynthConfig
 from repro.data.loader import CorpusLoader
 from repro.models import build_model
-from repro.serve import LATENCY, THROUGHPUT, StreamingEngine, bucket_length
+from repro.serve import (LATENCY, THROUGHPUT, StreamingEngine,
+                         bucket_length, padding_efficiency)
 
 
 def make_corpus(n_utts: int, n_mels: int = 16, seed: int = 0):
@@ -82,16 +94,116 @@ def engine_run(cfg, params, utts, k, policy, *, warm: bool = True):
     rids = [eng.submit(u) for u in utts]
     t0 = time.time()
     done_at = {}
+    batches = []
 
     def on_batch(fb):
         t = time.time()
+        batches.append(fb)
         for r in fb.requests:
             done_at[r.rid] = t
 
     eng.run(on_batch=on_batch)
     wall = time.time() - t0
     lat = [(done_at[rid] - t0) * 1e3 for rid in rids if rid in done_at]
-    return wall, lat
+    # efficiency from the exact batches the engine ran: dead tail rows
+    # count in padded_frames (FormedBatch accounting, pinned in tests)
+    eff = padding_efficiency(batches)
+    return wall, lat, eff
+
+
+# --------------------------------------------------------------- decode
+
+def make_decode_workload(vocab: int, n: int, *, ragged: bool, seed: int = 0):
+    """(prompt, max_new) pairs.  Ragged draws mixed prompt lengths and
+    budgets (the continuous batcher's home turf); lockstep uses one
+    length and one budget (the round engine's best case)."""
+    rng = np.random.default_rng(seed)
+    if ragged:
+        return [(rng.integers(1, vocab, int(rng.integers(3, 20))),
+                 int(rng.integers(4, 24))) for _ in range(n)]
+    return [(rng.integers(1, vocab, 8), 16) for _ in range(n)]
+
+
+def decode_run(srv, workload):
+    """Warm the server on a workload prefix (each engine's jit compiles
+    once per server instance), reset its stats, then submit the whole
+    workload and drain — steady-state wall/tokens/outputs."""
+    for p, m in workload[:2]:
+        srv.submit(p, max_new=m)
+    srv.drain()
+    for key in getattr(srv, "stats", {}):
+        srv.stats[key] = 0
+    rids = [srv.submit(p, max_new=m) for p, m in workload]
+    t0 = time.time()
+    done = srv.drain()
+    wall = time.time() - t0
+    outs = [done[r].out for r in rids]
+    return wall, sum(len(o) for o in outs), outs, getattr(srv, "stats", {})
+
+
+def decode_bench(args) -> dict:
+    from dataclasses import replace
+
+    from repro.configs import get_arch, reduced
+    from repro.serve import LATENCY, RoundTokenServer, TokenServer
+
+    cfg = reduced(get_arch(args.decode_arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    pol = replace(LATENCY, max_batch=args.decode_slots,
+                  sync_every=args.sync_every)
+    max_seq = 64
+
+    round_srv = RoundTokenServer(cfg, params, policy=pol, max_seq=max_seq)
+    cont_srv = TokenServer(cfg, params, policy=pol, max_seq=max_seq)
+    solo_srv = TokenServer(cfg, params, max_seq=max_seq,
+                           policy=replace(pol, max_batch=1))
+
+    # correctness gates first: lockstep parity + ragged vs sequential
+    lock = make_decode_workload(cfg.vocab_size, args.decode_slots,
+                                ragged=False, seed=1)
+    _, _, out_r, _ = decode_run(round_srv, lock)
+    _, _, out_c, _ = decode_run(cont_srv, lock)
+    lockstep_equal = out_r == out_c
+
+    work = make_decode_workload(cfg.vocab_size, args.decode_requests,
+                                ragged=True, seed=2)
+    wall_r, tok_r, out_r, _ = decode_run(round_srv, work)
+    wall_c, tok_c, out_c, stats = decode_run(cont_srv, work)
+    assert tok_r == tok_c, "engines emitted different token counts"
+    seq_outs = []
+    for p, m in work:                      # one server: one compile
+        rid = solo_srv.submit(p, max_new=m)
+        seq_outs.append(solo_srv.drain()[rid].out)
+    parity = out_r == seq_outs and out_c == seq_outs
+
+    tps_r, tps_c = tok_r / wall_r, tok_c / wall_c
+    speedup = tps_c / tps_r
+    occupancy = stats["active_slot_steps"] / max(stats["slot_steps"], 1)
+    print(f"\ndecode: {args.decode_requests} ragged requests "
+          f"(prompts 3..19, max_new 4..23), {args.decode_slots} slots, "
+          f"sync window {args.sync_every}; {cfg.name}")
+    rows = [("rounds (equal-length)", wall_r, tps_r),
+            ("continuous batching", wall_c, tps_c)]
+    print(f"{'path':<28}{'wall s':>8}{'tok/s':>10}")
+    for name, wall, tps in rows:
+        print(f"{name:<28}{wall:>8.2f}{tps:>10.1f}")
+    print(f"decode speedup: {speedup:.2f}x tok/s "
+          f"(lockstep-equal={lockstep_equal}, sequential-parity={parity}, "
+          f"{stats['syncs']} syncs / {stats['steps']} steps, "
+          f"occupancy {occupancy:.0%})")
+    assert lockstep_equal, "continuous != rounds on a lockstep workload"
+    assert parity, "engine outputs diverge from sequential decoding"
+    if args.assert_speedup:
+        assert speedup >= args.assert_speedup, (
+            f"continuous batching {speedup:.2f}x < required "
+            f"{args.assert_speedup}x over the round engine")
+    return {"arch": cfg.name, "n_requests": args.decode_requests,
+            "slots": args.decode_slots, "sync_every": args.sync_every,
+            "tok_s_rounds": tps_r, "tok_s_continuous": tps_c,
+            "speedup": speedup, "lockstep_equal": lockstep_equal,
+            "sequential_parity": parity, "slot_occupancy": occupancy,
+            "host_syncs": stats["syncs"], "decode_steps": stats["steps"]}
 
 
 def pct(xs, q):
@@ -107,6 +219,14 @@ def main(argv=None):
     ap.add_argument("--policy", default="throughput",
                     choices=["throughput", "latency"])
     ap.add_argument("--out", default="experiments/benchmarks")
+    ap.add_argument("--decode-arch", default="qwen2.5-3b")
+    ap.add_argument("--decode-requests", type=int, default=24)
+    ap.add_argument("--decode-slots", type=int, default=4)
+    ap.add_argument("--sync-every", type=int, default=8)
+    ap.add_argument("--assert-speedup", type=float, default=1.5,
+                    help="fail unless continuous >= this x rounds tok/s "
+                         "on the ragged workload (0 disables)")
+    ap.add_argument("--skip-decode", action="store_true")
     args = ap.parse_args(argv)
 
     from repro.configs.base import LayerSpec, Segment
@@ -137,7 +257,7 @@ def main(argv=None):
     naive_loop(naive_fwd, params, utts[:1], max_bucket)
 
     t_naive, lat_naive = naive_loop(naive_fwd, params, utts, max_bucket)
-    t_eng, lat_eng = engine_run(cfg, params, utts, args.k, policy)
+    t_eng, lat_eng, eff = engine_run(cfg, params, utts, args.k, policy)
 
     fps_naive = frames / t_naive
     fps_eng = frames / t_eng
@@ -152,14 +272,18 @@ def main(argv=None):
     for name, wall, fps, p50, p95 in rows:
         print(f"{name:<28}{wall:>8.2f}{fps:>10.0f}{p50:>9.1f}{p95:>9.1f}")
     speedup = fps_eng / fps_naive
-    print(f"speedup: {speedup:.2f}x frames/sec")
+    print(f"speedup: {speedup:.2f}x frames/sec "
+          f"(padding efficiency {eff:.0%})")
 
-    os.makedirs(args.out, exist_ok=True)
     rec = {"n_utts": args.n_utts, "frames": frames, "policy": policy.name,
            "fps_naive": fps_naive, "fps_engine": fps_eng,
-           "speedup": speedup,
+           "speedup": speedup, "padding_efficiency": eff,
            "p50_ms": {"naive": pct(lat_naive, 50), "engine": pct(lat_eng, 50)},
            "p95_ms": {"naive": pct(lat_naive, 95), "engine": pct(lat_eng, 95)}}
+    if not args.skip_decode:
+        rec["decode"] = decode_bench(args)
+
+    os.makedirs(args.out, exist_ok=True)
     path = os.path.join(args.out, "serve_bench.json")
     with open(path, "w") as f:
         json.dump(rec, f, indent=2)

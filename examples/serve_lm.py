@@ -2,11 +2,12 @@
 
   PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-2b
 
-Routes through the unified inference engine (``repro.serve``): requests
-are grouped into generation rounds by the latency policy and decoded
-batched against the KV/recurrent-state cache.  Works for every assigned
-arch (attention KV ring-buffers for SWA, RG-LRU/xLSTM recurrent states,
-MLA latent cache).
+Routes through the unified inference engine (``repro.serve``): the
+continuous batcher admits requests into per-row cache slots (ragged
+prefill at each row's own position), retires rows on their own max_new,
+and syncs emissions to the host once per decode window.  Works for
+every assigned arch (attention KV ring-buffers for SWA, RG-LRU/xLSTM
+recurrent states, MLA latent cache).
 """
 import argparse
 import time
@@ -45,8 +46,10 @@ def main():
     done = srv.drain()
     dt = time.time() - t0
     tok = sum(len(done[r].out) for r in rids)
+    st = srv.stats
     print(f"{len(rids)} requests, {tok} tokens in {dt:.1f}s "
-          f"({tok/dt:.1f} tok/s on CPU, reduced config)")
+          f"({tok/dt:.1f} tok/s on CPU, reduced config; {st['syncs']} "
+          f"host syncs over {st['steps']} decode steps)")
     for r in rids[:3]:
         print(f"  req {r}: {done[r].out[:8]}...")
 

@@ -1,10 +1,11 @@
 """Online serving entrypoint: the unified engine under a latency policy.
 
 All decode machinery lives in ``repro.serve`` — this module is the CLI.
-Token LMs go through ``serve.TokenServer`` (generation-round batched
-decode over the uniform cache surface); the acoustic model goes through
-``serve.StreamingEngine``'s slot-based streaming path (chunked audio with
-carried LSTM state).
+Token LMs go through ``serve.TokenServer`` (slot-based continuous
+batching over the per-row cache surface: ragged prefill, mid-flight
+admit/retire, one host sync per decode window); the acoustic model goes
+through ``serve.StreamingEngine``'s slot-based streaming path (chunked
+audio with carried LSTM state, double-buffered feed).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b
   PYTHONPATH=src python -m repro.launch.serve --arch lstm-am-7khr
@@ -33,8 +34,11 @@ def serve_tokens(cfg, params, *, n_requests: int = 6, max_new: int = 8,
     done = srv.drain()
     dt = time.time() - t0
     total = sum(len(done[r].out) for r in rids)
+    st = srv.stats
     print(f"[serve] {n_requests} requests, {total} tokens "
-          f"in {dt:.2f}s ({total / dt:.1f} tok/s)")
+          f"in {dt:.2f}s ({total / dt:.1f} tok/s; {st['syncs']} host "
+          f"syncs over {st['steps']} steps, slot occupancy "
+          f"{st['active_slot_steps'] / max(st['slot_steps'], 1):.0%})")
     for r in rids:
         print(f"  req {r}: {done[r].out}")
     return done
@@ -69,14 +73,25 @@ def serve_stream(cfg, params, *, n_streams: int = 3, chunk: int = 16,
                        ).astype(np.float32) for _ in range(n_streams)]
     sids = [eng.open_stream() for _ in range(n_streams)]
     got = {s: 0 for s in sids}
+
+    def chunk_iter():
+        # stage the next chunk while the current step computes: the
+        # pipelined driver keeps one feed in flight (double buffering)
+        sent = {s: 0 for s in sids}
+        while True:
+            chunks = {s: u[sent[s]:sent[s] + chunk]
+                      for s, u in zip(sids, utts) if sent[s] < u.shape[0]}
+            if not chunks:
+                return
+            for s, c in chunks.items():
+                sent[s] += c.shape[0]
+            yield chunks
+
     t0 = time.time()
     step = 0
-    while any(got[s] < u.shape[0] for s, u in zip(sids, utts)):
-        chunks = {s: u[got[s]:got[s] + chunk]
-                  for s, u in zip(sids, utts) if got[s] < u.shape[0]}
-        out = eng.feed(chunks)
-        for s in out:
-            got[s] += chunks[s].shape[0]
+    for out in eng.feed_pipelined(chunk_iter(), depth=2):
+        for s, (vals, _) in out.items():
+            got[s] += vals.shape[0]
         step += 1
     dt = time.time() - t0
     frames = sum(u.shape[0] for u in utts)

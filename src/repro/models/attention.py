@@ -206,34 +206,60 @@ def init_attn_cache(cfg, spec, batch, seq_len, dtype):
             "v": jnp.zeros((batch, hkv, slots, hd), dtype)}
 
 
+def row_update(cache_arr, new, slot, *, axis=2):
+    """Per-row cache write: row b of ``cache_arr`` takes ``new[b]`` at its
+    own slot index.  ``axis`` is the slot axis of the *full* batched array
+    (2 for a (B, heads, S, hd) KV cache, 1 for a (B, S, d) latent cache);
+    slot (B,) int32.  Written as a one-hot select rather than a vmapped
+    dynamic_update_slice: identical values, but it lowers to a fused
+    elementwise op instead of a scatter (~3x faster per step on CPU)."""
+    slots = cache_arr.shape[axis]
+    m = jnp.arange(slots)[None, :] == slot[:, None]            # (B, slots)
+    m = m.reshape((slot.shape[0],) + (1,) * (axis - 1) + (slots,)
+                  + (1,) * (cache_arr.ndim - axis - 1))
+    return jnp.where(m, new, cache_arr)
+
+
 def attention_decode(params, cfg, spec, x, cache, pos):
-    """One-token decode. x (B,1,D); pos scalar int32 (tokens so far)."""
+    """One-token decode. x (B,1,D); pos int32: a scalar (all rows in
+    lockstep — the legacy shape, kept bitwise) or (B,) per-row positions
+    (continuous batching: each row writes and reads its cache at its own
+    position; ring indexing, masking and RoPE become row-indexed)."""
     b = x.shape[0]
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
-    q, k, v = _project_qkv(params, cfg, x, pos[None] if pos.ndim == 0
-                           else pos)
+    per_row = pos.ndim == 1 and pos.shape[0] == b
+    q, k, v = _project_qkv(params, cfg, x,
+                           pos[:, None, None] if per_row
+                           else (pos[None] if pos.ndim == 0 else pos))
     slots = cache["k"].shape[2]
     slot = jax.lax.rem(pos, slots) if slots else pos
-    ck = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], k.astype(cache["k"].dtype), slot, axis=2)
-    cv = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], v.astype(cache["v"].dtype), slot, axis=2)
-    # positions held by each cache slot (ring for swa, linear otherwise)
+    if per_row:
+        ck = row_update(cache["k"], k.astype(cache["k"].dtype), slot)
+        cv = row_update(cache["v"], v.astype(cache["v"].dtype), slot)
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=2)
+    # positions held by each cache slot (ring for swa, linear otherwise);
+    # per-row, pos (B,1) broadcasts against idx (slots,) -> (B, slots)
     idx = jnp.arange(slots)
+    posb = pos[:, None] if per_row else pos
     if spec.mixer == "swa" and spec.window and slots < 2**30:
         # slot j holds position: the latest p <= pos with p % slots == j
-        kpos = pos - jax.lax.rem(pos - idx, slots)
-        kpos = jnp.where(kpos > pos, kpos - slots, kpos)  # safety
-        valid = (kpos >= 0) & (pos - kpos < spec.window) & (kpos <= pos)
+        kpos = posb - jax.lax.rem(posb - idx, slots)
+        kpos = jnp.where(kpos > posb, kpos - slots, kpos)  # safety
+        valid = (kpos >= 0) & (posb - kpos < spec.window) & (kpos <= posb)
     else:
-        kpos = idx
-        valid = idx <= pos
+        valid = idx <= posb
     scale = 1.0 / np.sqrt(hd)
     qg = q.reshape(b, hkv, hq // hkv, 1, hd)
     s_ = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
                     ck.astype(jnp.float32)) * scale
     s_ = layers.softcap(s_, cfg.attn_softcap)
-    s_ = jnp.where(valid[None, None, None, None, :], s_, NEG_INF)
+    vmask = (valid[:, None, None, None, :] if per_row
+             else valid[None, None, None, None, :])
+    s_ = jnp.where(vmask, s_, NEG_INF)
     p = jax.nn.softmax(s_, axis=-1)
     o = jnp.einsum("bhgqk,bhkd->bhgqd", p, cv.astype(jnp.float32))
     o = o.reshape(b, hq, 1, hd).transpose(0, 2, 1, 3).reshape(b, 1, hq * hd)

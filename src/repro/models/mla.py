@@ -100,17 +100,29 @@ def init_mla_cache(cfg, batch, seq_len, dtype):
 
 
 def mla_decode(params, cfg, x, cache, pos):
-    """Absorbed single-token decode. x (B,1,D)."""
+    """Absorbed single-token decode. x (B,1,D); pos scalar (lockstep rows,
+    kept bitwise) or (B,) per-row positions (continuous batching)."""
     m = cfg.mla
     b = x.shape[0]
     h = cfg.n_heads
     scale = 1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
-    q_nope, q_rope = _queries(params, cfg, x, pos[None])
-    c_new, kr_new = _latents(params, cfg, x, pos[None])
-    c = jax.lax.dynamic_update_slice_in_dim(
-        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1)
-    kr = jax.lax.dynamic_update_slice_in_dim(
-        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1)
+    per_row = pos.ndim == 1 and pos.shape[0] == b
+    q_nope, q_rope = _queries(params, cfg, x,
+                              pos[:, None, None] if per_row else pos[None])
+    c_new, kr_new = _latents(params, cfg, x,
+                             pos[:, None] if per_row else pos[None])
+    if per_row:
+        c = attn_mod.row_update(
+            cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1)
+        kr = attn_mod.row_update(
+            cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos,
+            axis=1)
+    else:
+        c = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1)
+        kr = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos,
+            axis=1)
     # absorb W_uk into the query: q_c (B,H,rank)
     w_uk = params["w_uk"].astype(x.dtype).reshape(m.kv_lora_rank, h,
                                                   m.qk_nope_head_dim)
@@ -120,8 +132,12 @@ def mla_decode(params, cfg, x, cache, pos):
     s_rope = jnp.einsum("bhd,bsd->bhs", q_rope[:, :, 0].astype(jnp.float32),
                         kr.astype(jnp.float32))
     s_ = (s_nope + s_rope) * scale
-    valid = jnp.arange(c.shape[1]) <= pos
-    s_ = jnp.where(valid[None, None], s_, NEG_INF)
+    if per_row:
+        valid = jnp.arange(c.shape[1])[None, :] <= pos[:, None]   # (B,S)
+        s_ = jnp.where(valid[:, None], s_, NEG_INF)
+    else:
+        valid = jnp.arange(c.shape[1]) <= pos
+        s_ = jnp.where(valid[None, None], s_, NEG_INF)
     p = jax.nn.softmax(s_, axis=-1)
     # attention over latents, then decompress once per head
     o_c = jnp.einsum("bhs,bsr->bhr", p, c.astype(jnp.float32))  # (B,H,rank)

@@ -221,9 +221,15 @@ class Transformer:
         return x, aux_total
 
     # ---- decode ----
-    def init_cache(self, batch, seq_len, dtype=jnp.bfloat16):
+    def init_cache(self, batch, seq_len, dtype=jnp.bfloat16, *,
+                   per_row=False):
+        """Decode cache.  ``per_row=True`` carries one position *per batch
+        row* ((B,) int32) instead of a shared scalar, making ragged
+        continuous batching legal: rows may sit at different sequence
+        positions within one decode step.  The scalar default keeps every
+        existing lockstep jit bitwise."""
         cfg = self.cfg
-        cache = {"pos": jnp.zeros((), jnp.int32)}
+        cache = {"pos": jnp.zeros((batch,) if per_row else (), jnp.int32)}
         for si, seg in enumerate(cfg.segments):
             def one(sp):
                 return init_block_cache(cfg, sp, batch, seq_len, dtype)
@@ -234,13 +240,16 @@ class Transformer:
         return cache
 
     def decode_step(self, params, cache, tokens):
-        """tokens (B,1). Returns (logits (B,1,V), new cache)."""
+        """tokens (B,1). Returns (logits (B,1,V), new cache).  With a
+        per-row cache (see ``init_cache``) every positional lookup is
+        row-indexed; the scalar-position path is unchanged."""
         cfg = self.cfg
         pos = cache["pos"]
         x = self.embed(params, tokens)
         if cfg.pos_emb == "learned":
-            x = x + params["pos"].astype(x.dtype)[
-                jnp.clip(pos, 0, params["pos"].shape[0] - 1)][None, None]
+            pe = params["pos"].astype(x.dtype)[
+                jnp.clip(pos, 0, params["pos"].shape[0] - 1)]
+            x = x + (pe[:, None] if pos.ndim else pe[None, None])
         new_cache = {"pos": pos + 1}
         for si, seg in enumerate(cfg.segments):
             seg_params = params[f"seg{si}"]
@@ -271,6 +280,21 @@ class Transformer:
             new_cache[f"seg{si}"] = new_seg_cache
         x = layers.norm_apply(params["final_norm"], x, cfg.norm)
         return self.unembed(params, x), new_cache
+
+    def reset_cache_rows(self, cache, rows):
+        """Zero the cache rows selected by the (B,) bool mask ``rows`` and
+        reset their positions to 0 — the continuous batcher's slot
+        admission hook.  Per-row caches only (pos must be (B,)).  KV
+        entries past a row's position are masked out by decode anyway;
+        zeroing everything also covers recurrent/conv state, whose whole
+        content is live."""
+        def zero(a):
+            m = rows.reshape((1, -1) + (1,) * (a.ndim - 2))   # (rep, B, ...)
+            return jnp.where(m, jnp.zeros((), a.dtype), a)
+        new = {"pos": jnp.where(rows, 0, cache["pos"])}
+        for si in range(len(self.cfg.segments)):
+            new[f"seg{si}"] = jax.tree_util.tree_map(zero, cache[f"seg{si}"])
+        return new
 
     # ---- MTP auxiliary hidden (deepseek-v3) ----
     def mtp_hidden(self, params, hidden, tokens_shifted, positions):

@@ -174,12 +174,16 @@ class Whisper:
             jnp.float32)
 
     # ---- decode ----
-    def init_cache(self, batch, seq_len, dtype=jnp.bfloat16):
+    def init_cache(self, batch, seq_len, dtype=jnp.bfloat16, *,
+                   per_row=False):
+        """``per_row=True`` carries a (B,) position vector (ragged
+        continuous batching); the scalar default stays bitwise for
+        lockstep callers — see ``Transformer.init_cache``."""
         cfg = self.cfg
         h, hd = cfg.n_heads, cfg.resolved_head_dim
         n = cfg.n_layers
         return {
-            "pos": jnp.zeros((), jnp.int32),
+            "pos": jnp.zeros((batch,) if per_row else (), jnp.int32),
             "k": jnp.zeros((n, batch, cfg.n_kv_heads, seq_len, hd), dtype),
             "v": jnp.zeros((n, batch, cfg.n_kv_heads, seq_len, hd), dtype),
             # cross-attention K/V precomputed from the encoder output
@@ -208,8 +212,8 @@ class Whisper:
         pos = cache["pos"]
         b = tokens.shape[0]
         x = params["embed"][tokens]
-        x = x + params["dec_pos"].astype(x.dtype)[
-            jnp.clip(pos, 0, MAX_POS - 1)][None, None]
+        pe = params["dec_pos"].astype(x.dtype)[jnp.clip(pos, 0, MAX_POS - 1)]
+        x = x + (pe[:, None] if pos.ndim else pe[None, None])
 
         def body(carry, xs):
             x = carry
@@ -250,3 +254,17 @@ class Whisper:
         new_cache.update({"pos": pos + 1, "k": nk, "v": nv})
         x = layers.norm_apply(params["final_norm"], x, cfg.norm)
         return self.unembed(params, x), new_cache
+
+    def reset_cache_rows(self, cache, rows):
+        """Zero the self-attention KV rows selected by the (B,) bool mask
+        and reset their positions — continuous-batching slot admission.
+        Cross-attention K/V is *kept*: it belongs to the encoder pass and
+        is refilled by ``prefill_cache`` when the slot's new utterance
+        arrives.  Per-row caches only."""
+        m = rows[None, :, None, None, None]           # (n, B, H, S, hd)
+        new = dict(cache)
+        new["pos"] = jnp.where(rows, 0, cache["pos"])
+        for key in ("k", "v"):
+            new[key] = jnp.where(m, jnp.zeros((), cache[key].dtype),
+                                 cache[key])
+        return new

@@ -3,22 +3,27 @@ teacher target generation and online serving are the same workload under
 different batching policies).
 
   StreamingEngine — bucketed batch inference + per-stream chunked
-      streaming with carried LSTM state, top-k logit emission.
-  TokenServer — generation-round batched decode for the token-LM
-      serving surface (launch/serve.py, examples/serve_lm.py).
+      streaming with carried LSTM state and a double-buffered feed,
+      top-k logit emission.
+  TokenServer — slot-based continuous batcher for the token-LM serving
+      surface (per-row cache positions, mid-flight admit/retire,
+      chunked emission sync; launch/serve.py, examples/serve_lm.py).
+  RoundTokenServer — the legacy generation-round engine (lockstep
+      baseline for parity tests and benchmarks).
   BatchPolicy / THROUGHPUT / LATENCY — batch-formation policies.
 """
 from repro.serve.batcher import (LATENCY, THROUGHPUT, BatchPolicy,
                                  FormedBatch, bucket_length, form_batches,
                                  padding_efficiency)
-from repro.serve.decode import TokenRequest, TokenServer
-from repro.serve.engine import StreamingEngine, make_topk_emitter
+from repro.serve.decode import RoundTokenServer, TokenRequest, TokenServer
+from repro.serve.engine import (StreamingEngine, StreamFeed,
+                                make_topk_emitter)
 from repro.serve.request import (CompletedRequest, InferenceRequest,
                                  RequestQueue)
 
 __all__ = [
     "BatchPolicy", "THROUGHPUT", "LATENCY", "FormedBatch", "bucket_length",
-    "form_batches", "padding_efficiency", "StreamingEngine",
-    "make_topk_emitter", "TokenServer", "TokenRequest", "InferenceRequest",
-    "CompletedRequest", "RequestQueue",
+    "form_batches", "padding_efficiency", "StreamingEngine", "StreamFeed",
+    "make_topk_emitter", "TokenServer", "RoundTokenServer", "TokenRequest",
+    "InferenceRequest", "CompletedRequest", "RequestQueue",
 ]

@@ -31,21 +31,26 @@ from repro.serve.request import InferenceRequest
 class BatchPolicy:
     """How the batcher groups pending requests.
 
-    max_batch: rows per formed batch (batch dim is padded to this).
+    max_batch: rows per formed batch (batch dim is padded to this); for
+        the token server this is the continuous batcher's slot count.
     bucket_multiple: time-length rounding quantum (padding/compile trade).
     sort_by_length: pack near-equal lengths together (throughput) or
         preserve arrival order (latency fairness).
+    sync_every: the token server's decode-window length — fused device
+        steps between host syncs (admit/retire cadence).  Small keeps
+        first-token latency low; large amortizes host syncs.
     """
     name: str
     max_batch: int = 16
     bucket_multiple: int = 64
     sort_by_length: bool = True
+    sync_every: int = 8
 
 
 THROUGHPUT = BatchPolicy("throughput", max_batch=16, bucket_multiple=64,
-                         sort_by_length=True)
+                         sort_by_length=True, sync_every=16)
 LATENCY = BatchPolicy("latency", max_batch=4, bucket_multiple=16,
-                      sort_by_length=False)
+                      sort_by_length=False, sync_every=4)
 
 
 def bucket_length(t: int, multiple: int) -> int:

@@ -1,28 +1,40 @@
-"""Slot-based batched decode engine for the token-LM serving surface.
+"""Continuous-batching decode engine for the token-LM serving surface.
 
 Every assigned arch exposes the uniform ``init_cache``/``decode_step``
-surface, but the cache keeps a *single scalar position shared by all
-batch rows* — so rows of one batch must advance in lockstep.  The seed
-``BatchedServer`` prefilled one slot at a time through the shared decode
-step, silently appending garbage KV entries to every other active slot's
-cache.  This engine replaces that with **generation rounds** that are
-correct under the shared position:
+surface; with ``init_cache(per_row=True)`` the cache carries one int32
+position *per batch row*, so rows of one batch may sit at different
+sequence positions.  ``TokenServer`` exploits that as a **slot-based
+continuous batcher** (the vLLM-style serving loop, scaled to this repo):
 
-  * requests are grouped by *exactly equal prompt length* (the batcher's
-    bucketing, degenerate bucket size 1), up to ``policy.max_batch`` rows;
-  * a round prefills all its rows together token-by-token (each row feeds
-    its own prompt token — no cross-row pollution), then decodes batched
-    until every row hit its ``max_new``;
-  * rows that finish early keep stepping on their own cache (harmless:
-    rows only ever read their own cache rows) with outputs discarded.
+  * each of ``policy.max_batch`` device slots holds one in-flight
+    request; a newly admitted request's row is zeroed
+    (``model.reset_cache_rows``) and then consumes its own prompt
+    token-by-token through the decode path at its own position — ragged
+    batched prefill, no equal-length grouping, no head-of-line blocking;
+  * rows retire individually on their own ``max_new`` (or ``eos_id``)
+    and their slot is re-admitted from the queue mid-flight, while the
+    other rows keep decoding;
+  * the jitted step is a fused ``sync_every``-step ``lax.scan`` whose
+    per-step emissions land in a device-side buffer — the host syncs
+    **once per window**, not once per token (O(steps/K) transfers), and
+    does all admit/retire bookkeeping at that cadence.
 
-Under the LATENCY policy rounds are small and start as soon as work
-exists; THROUGHPUT packs full rounds.
+Rows are *row-pure* (a row only ever reads its own cache row), so a
+retired slot overshooting until the next sync is waste, not corruption —
+the host discards tokens past the request's retirement point and the
+cost accounting (``stats["active_slot_steps"]``) excludes them.
+
+``RoundTokenServer`` is the previous engine — generation rounds of
+exactly equal prompt length over the shared-scalar-position cache.  It
+is kept as the lockstep baseline: the continuous engine must match it
+token-for-token on equal-length workloads (pinned in
+tests/test_serve_engine.py) and beat it on ragged ones
+(benchmarks/serve_bench.py).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -41,15 +53,260 @@ class TokenRequest:
     max_new: int = 16
     out: List[int] = field(default_factory=list)
     done: bool = False
+    finished_sync: int = -1         # pump index at completion (latency
+                                    # accounting; -1 while in flight)
+
+
+def _validate_submit(prompt, max_new, max_seq):
+    prompt = np.asarray(prompt, np.int32)
+    if prompt.ndim != 1 or prompt.shape[0] < 1:
+        raise ValueError(
+            f"expected a non-empty 1-D token prompt, got shape "
+            f"{prompt.shape}")
+    if max_new < 1:
+        raise ValueError("max_new must be >= 1")
+    if prompt.shape[0] + max_new - 1 > max_seq:
+        # a request consumes plen prefill entries + (max_new - 1) decode
+        # entries (the last token is emitted without being fed back);
+        # past max_seq the cache position wraps its ring buffer silently
+        # (attention_decode: slot = pos % slots) — refuse rather than
+        # return corrupted output
+        raise ValueError(
+            f"prompt ({prompt.shape[0]}) + max_new ({max_new}) needs "
+            f"{prompt.shape[0] + max_new - 1} cache entries > max_seq "
+            f"({max_seq})")
+    return prompt
 
 
 class TokenServer:
-    """Generation-round batched decoding over the uniform decode surface.
+    """Slot-based continuous batcher over the per-row decode surface.
 
     Request bookkeeping lives in the payload-agnostic
-    ``serve.request.RequestQueue`` (the same FIFO + completion ledger
-    the feature engine uses); this class only forms rounds and drives
-    the decode step."""
+    ``serve.request.RequestQueue``; this class owns the device slots:
+    admission, the fused K-step decode window, and retirement.
+
+    ``pump()`` runs one sync window and returns the requests it
+    completed; ``drain()`` pumps until the queue is empty.  ``policy``
+    sets the slot count (``max_batch``) and the default sync cadence
+    (``sync_every`` — small under LATENCY for fast first-token
+    visibility, larger under THROUGHPUT to amortize host syncs).
+    """
+
+    def __init__(self, cfg, params, *, policy: BatchPolicy = LATENCY,
+                 max_seq: int = 256, cache_dtype=jnp.bfloat16,
+                 sync_every: Optional[int] = None,
+                 eos_id: Optional[int] = None):
+        if cfg.family == "lstm_am":
+            raise ValueError("TokenServer is the token-LM decode surface; "
+                             "acoustic models go through StreamingEngine")
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.policy = policy
+        self.max_seq = max_seq
+        self.cache_dtype = cache_dtype
+        self.b = policy.max_batch
+        self.sync_every = int(sync_every if sync_every is not None
+                              else policy.sync_every)
+        if self.sync_every < 1:
+            raise ValueError("sync_every must be >= 1")
+        self.eos_id = eos_id
+        self.queue = RequestQueue()
+        self.serve = jax.jit(self._make_window())
+        self._reset = jax.jit(self.model.reset_cache_rows)
+        # device state (lazily built on first pump)
+        self._cache = None
+        self._tok = None
+        self._prompts_d = None          # device-resident prompt buffer /
+        self._plens_d = None            # lens, refreshed on admission only
+        # host-side slot mirrors
+        self._slots: List[Optional[object]] = [None] * self.b
+        self._pos = np.zeros((self.b,), np.int64)       # tokens consumed
+        self._prompts = np.zeros((self.b, max_seq), np.int32)
+        self._plens = np.zeros((self.b,), np.int32)
+        self.stats = {"steps": 0, "syncs": 0, "slot_steps": 0,
+                      "active_slot_steps": 0, "tokens_out": 0,
+                      "admitted": 0}
+
+    # ------------------------------------------------------- jitted window
+
+    def _make_window(self):
+        """K fused decode steps: each row feeds its own prompt token while
+        ``pos < plen`` (ragged prefill) and its last sampled token after;
+        emissions accumulate on device, one host sync per window."""
+        serve_step = make_serve_step(self.model, self.cfg)
+        k = self.sync_every
+
+        def window(params, cache, tok, prompts, plens):
+            pmax = prompts.shape[1]
+
+            def body(carry, _):
+                cache, tok = carry
+                pos = cache["pos"]                       # (B,) per-row
+                ptok = jnp.take_along_axis(
+                    prompts, jnp.minimum(pos, pmax - 1)[:, None], axis=1)
+                feed = jnp.where((pos < plens)[:, None], ptok, tok)
+                nxt, _, cache = serve_step(params, cache, feed)
+                return (cache, nxt), nxt[:, 0]
+
+            (cache, tok), emitted = jax.lax.scan(body, (cache, tok), None,
+                                                 length=k)
+            return cache, tok, emitted                   # emitted (k, B)
+        return window
+
+    # ------------------------------------------------------------- submit
+
+    def submit(self, prompt: np.ndarray, max_new: int = 16) -> int:
+        prompt = _validate_submit(prompt, max_new, self.max_seq)
+        req = TokenRequest(-1, prompt, max_new)
+        req.rid = self.queue.submit(req)
+        return req.rid
+
+    # ---------------------------------------------------------- slot loop
+
+    def _ensure_device_state(self):
+        if self._cache is None:
+            cache = self.model.init_cache(
+                self.b, self.max_seq, self.cache_dtype, per_row=True)
+            # settle carry dtypes: some decode states come back in compute
+            # dtype (e.g. recurrent conv tails, f32) while init_cache laid
+            # them out in cache_dtype — a lax.scan carry must be
+            # dtype-stable, so cast the (all-zero) init cache to the
+            # post-step dtypes up front.  Values are unchanged (zeros),
+            # keeping lockstep parity with the round engine bitwise.
+            tok0 = jnp.zeros((self.b, 1), jnp.int32)
+            settled = jax.eval_shape(self.model.decode_step, self.params,
+                                     cache, tok0)[1]
+            self._cache = jax.tree_util.tree_map(
+                lambda a, s: a.astype(s.dtype), cache, settled)
+            self._tok = jnp.zeros((self.b, 1), jnp.int32)
+
+    def _admit(self) -> List[int]:
+        """Fill free slots from the queue head (arrival order)."""
+        free = [i for i in range(self.b) if self._slots[i] is None]
+        if not free:
+            return []
+        reqs = self.queue.pop_pending(max_n=len(free))
+        admitted = []
+        for slot, req in zip(free, reqs):
+            r = req.payload
+            self._slots[slot] = req
+            self._pos[slot] = 0
+            self._prompts[slot] = 0
+            self._prompts[slot, :r.prompt.shape[0]] = r.prompt
+            self._plens[slot] = r.prompt.shape[0]
+            admitted.append(slot)
+        self.stats["admitted"] += len(admitted)
+        return admitted
+
+    def _abort(self):
+        """Failure recovery: a failed window must not strand its slots —
+        outputs reset, requests requeued, device state dropped (same
+        invariant as StreamingEngine.run / restore_in_flight)."""
+        for req in self._slots:
+            if req is not None:
+                req.payload.out.clear()
+                req.payload.done = False
+        self._slots = [None] * self.b
+        self._plens[:] = 0
+        self._pos[:] = 0
+        self._cache = None
+        self._tok = None
+        self._prompts_d = None
+        self._plens_d = None
+        self.queue.restore_in_flight()
+
+    def pump(self) -> Dict[int, TokenRequest]:
+        """One sync window: admit pending requests into free slots, run
+        ``sync_every`` fused decode steps, one device→host sync for the
+        window's emissions, then retire rows that hit max_new/EOS.
+        Returns (and evicts) the requests completed by this window."""
+        k = self.sync_every
+        try:
+            admitted = self._admit()
+            if all(s is None for s in self._slots):
+                return {rid: cr.result
+                        for rid, cr in self.queue.pop_completed().items()}
+            self._ensure_device_state()
+            if admitted:
+                mask = np.zeros((self.b,), bool)
+                mask[admitted] = True
+                self._cache = self._reset(self._cache, jnp.asarray(mask))
+                # prompts/plens only change on admission: refresh the
+                # device copies here, not once per window (a retired
+                # slot's stale device plen is harmless — the row is
+                # garbage until its next admission re-uploads)
+                self._prompts_d = jnp.asarray(self._prompts)
+                self._plens_d = jnp.asarray(self._plens)
+            cache, tok, emitted = self.serve(
+                self.params, self._cache, self._tok,
+                self._prompts_d, self._plens_d)
+            emitted = np.asarray(emitted)    # THE host sync of this window
+        except BaseException:
+            # admission, row reset and the window itself all recover the
+            # same way: nothing may stay stranded in a slot
+            self._abort()
+            raise
+        self._cache, self._tok = cache, tok
+        self.stats["syncs"] += 1
+        self.stats["steps"] += k
+        self.stats["slot_steps"] += k * self.b
+        for i, req in enumerate(self._slots):
+            p0 = int(self._pos[i])
+            self._pos[i] += k
+            if req is None:
+                continue
+            r = req.payload
+            plen = int(self._plens[i])
+            live = 0
+            for j in range(k):
+                if r.done:          # overshoot past retirement: excluded
+                    break           # from cost, tokens discarded
+                live += 1
+                g = p0 + j - (plen - 1)     # generated-token index
+                if g < 0:                   # still consuming the prompt
+                    continue
+                t = int(emitted[j, i])
+                r.out.append(t)
+                self.stats["tokens_out"] += 1
+                if (self.eos_id is not None and t == self.eos_id) \
+                        or len(r.out) >= r.max_new:
+                    r.done = True
+            self.stats["active_slot_steps"] += live
+            if r.done:
+                r.finished_sync = self.stats["syncs"]
+                self._slots[i] = None
+                self._plens[i] = 0
+                self.queue.complete(r.rid, r)
+        return {rid: cr.result
+                for rid, cr in self.queue.pop_completed().items()}
+
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self._slots)
+
+    def drain(self) -> Dict[int, TokenRequest]:
+        """Pump until no pending or in-flight work remains.  Returns (and
+        evicts) the requests completed since the last drain — the
+        server's ledger must not grow with uptime."""
+        done: Dict[int, TokenRequest] = {}
+        while self.queue.n_pending or self.n_active:
+            done.update(self.pump())
+        done.update({rid: cr.result
+                     for rid, cr in self.queue.pop_completed().items()})
+        return done
+
+
+class RoundTokenServer:
+    """Generation-round batched decoding over the *scalar*-position cache
+    — the pre-continuous-batching engine, kept as the lockstep baseline
+    (parity tests, benchmarks/serve_bench.py).
+
+    Rounds group requests by exactly equal prompt length, prefill
+    token-by-token in lockstep, and decode until every row hit its
+    ``max_new`` — early-finished rows burn steps until the slowest row
+    completes, and each decode step pays one device→host sync.  The
+    continuous ``TokenServer`` removes all three costs."""
 
     def __init__(self, cfg, params, *, policy: BatchPolicy = LATENCY,
                  max_seq: int = 256, cache_dtype=jnp.bfloat16):
@@ -64,23 +321,7 @@ class TokenServer:
         self.queue = RequestQueue()
 
     def submit(self, prompt: np.ndarray, max_new: int = 16) -> int:
-        prompt = np.asarray(prompt, np.int32)
-        if prompt.ndim != 1 or prompt.shape[0] < 1:
-            raise ValueError(
-                f"expected a non-empty 1-D token prompt, got shape "
-                f"{prompt.shape}")
-        if max_new < 1:
-            raise ValueError("max_new must be >= 1")
-        if prompt.shape[0] + max_new - 1 > self.max_seq:
-            # a round writes plen prefill entries + (max_new - 1) decode
-            # entries (the last token is emitted without a step); past
-            # max_seq the shared cache position wraps its ring buffer
-            # silently (attention_decode: slot = pos % slots) — refuse
-            # rather than return corrupted output
-            raise ValueError(
-                f"prompt ({prompt.shape[0]}) + max_new ({max_new}) needs "
-                f"{prompt.shape[0] + max_new - 1} cache entries > max_seq "
-                f"({self.max_seq})")
+        prompt = _validate_submit(prompt, max_new, self.max_seq)
         req = TokenRequest(-1, prompt, max_new)
         req.rid = self.queue.submit(req)
         return req.rid
@@ -133,9 +374,7 @@ class TokenServer:
 
     def drain(self) -> Dict[int, TokenRequest]:
         """Run rounds until no pending work remains.  Returns (and
-        evicts) the requests completed since the last drain — like
-        StreamingEngine.run, the server's ledger must not grow with
-        uptime."""
+        evicts) the requests completed since the last drain."""
         while self.queue.n_pending:
             round_ = self._next_round()
             if not round_:
@@ -144,8 +383,7 @@ class TokenServer:
                 self._run_round(round_)
             except BaseException:
                 # a failed step must not strand the round: reset partial
-                # outputs and put the requests back for retry (same
-                # invariant as StreamingEngine.run / restore_in_flight)
+                # outputs and put the requests back for retry
                 for r in round_:
                     r.out.clear()
                     r.done = False

@@ -12,7 +12,10 @@ inference-as-a-service):
   * **Online serving**: the same engine under a LATENCY policy, plus a
     slot-based *streaming* path that carries each stream's LSTM (h, c)
     across chunks, so audio can be fed incrementally with batched compute
-    across concurrent streams.
+    across concurrent streams.  ``feed_async``/``feed_pipelined``
+    double-buffer the host→device transfer: the next chunk is staged
+    while the current jitted step computes (the serve-side analogue of
+    the training feed's ``pipeline.PrefetchingSource``).
 
 Length correctness is delegated to the model's ``lens`` support
 (``models/recurrent.py``): padded rows freeze their recurrent state at
@@ -27,6 +30,7 @@ values + int32 indices).
 """
 from __future__ import annotations
 
+from collections import deque
 from typing import Dict, Optional
 
 import jax
@@ -59,6 +63,33 @@ def make_topk_emitter(k: int, impl: str = "lax", *, interpret: bool = True):
     if impl != "lax":
         raise ValueError(f"unknown topk impl {impl!r}")
     return lambda logits: ls.topk_compress(logits, k)
+
+
+class StreamFeed:
+    """Handle for a dispatched streaming step: holds the (still
+    device-resident) padded outputs plus the chunk map needed to unpad.
+    ``result()`` is the step's only host sync and is idempotent."""
+
+    def __init__(self, vals, idx, chunk_lens: Dict[int, int]):
+        self._vals, self._idx = vals, idx
+        self._chunk_lens = chunk_lens
+        self._out: Optional[dict] = None
+        self._done = not chunk_lens
+
+    def result(self) -> Dict[int, tuple]:
+        """{sid: (vals (t, k), idx (t, k))} — blocks until the step's
+        outputs are on host."""
+        if self._done:
+            return self._out or {}
+        vals = np.asarray(jax.device_get(self._vals).astype(jnp.float32))
+        idx = np.asarray(jax.device_get(self._idx))
+        # copies, not views: accumulating consumers must not pin the
+        # whole padded slot batch per chunk (same invariant as run())
+        self._out = {sid: (vals[sid, :t].copy(), idx[sid, :t].copy())
+                     for sid, t in self._chunk_lens.items()}
+        self._vals = self._idx = None        # release the device refs
+        self._done = True
+        return self._out
 
 
 class StreamingEngine:
@@ -199,15 +230,25 @@ class StreamingEngine:
         self._slot_free.append(sid)
         self._slot_free.sort()
 
-    def feed(self, chunks: Dict[int, np.ndarray]):
-        """One batched streaming step over all active streams.
+    def feed_async(self, chunks: Dict[int, np.ndarray]) -> "StreamFeed":
+        """Stage and dispatch one batched streaming step without waiting
+        for its results.
 
-        chunks: {sid: (t, F)} — chunk lengths may differ per stream
-        (each stream's state freezes at its own valid length).  Returns
-        {sid: (vals (t, k), idx (t, k))}.
+        The H2D transfer (``jax.device_put``) and the jitted step are
+        both async, so a caller that dispatches chunk *n+1* before
+        collecting chunk *n*'s results (``StreamFeed.result()``)
+        overlaps next-chunk host-side staging with the current step's
+        device compute — host↔device double buffering, the serve-side
+        analogue of the training feed's ``pipeline.PrefetchingSource``.
+        ``feed_pipelined`` is the packaged driver.
+
+        A zero-frame ``(0, F)`` chunk is refused: it would write
+        ``lens[sid] = 0`` and silently waste a batched step.  An empty
+        ``chunks`` dict (e.g. every stream closed) is an explicit no-op
+        — no step is dispatched.
         """
         if not chunks:
-            return {}
+            return StreamFeed(None, None, {})
         chunks = {sid: np.asarray(c) for sid, c in chunks.items()}
         for sid, c in chunks.items():
             if not 0 <= sid < self.n_slots or sid in self._slot_free:
@@ -216,6 +257,10 @@ class StreamingEngine:
                 raise ValueError(
                     f"stream {sid}: expected (t, {self.cfg.feat_dim}) "
                     f"chunk, got {c.shape}")
+            if c.shape[0] == 0:
+                raise ValueError(
+                    f"stream {sid}: zero-frame chunk — skip the stream "
+                    f"this step instead of feeding an empty chunk")
         self._ensure_stream_state()
         t_max = bucket_length(max(c.shape[0] for c in chunks.values()),
                               self.policy.bucket_multiple)
@@ -226,12 +271,35 @@ class StreamingEngine:
             feats[sid, :c.shape[0]] = c
             lens[sid] = c.shape[0]
         vals, idx, self._stream_state = self._stream_fwd(
-            self.params, self._stream_state, jnp.asarray(feats),
-            jnp.asarray(lens))
-        vals = np.asarray(jax.device_get(vals).astype(jnp.float32))
-        idx = np.asarray(jax.device_get(idx))
-        # copies, not views: accumulating consumers must not pin the
-        # whole padded slot batch per chunk (same invariant as run())
-        return {sid: (vals[sid, :c.shape[0]].copy(),
-                      idx[sid, :c.shape[0]].copy())
-                for sid, c in chunks.items()}
+            self.params, self._stream_state, jax.device_put(feats),
+            jax.device_put(lens))
+        return StreamFeed(vals, idx,
+                          {sid: c.shape[0] for sid, c in chunks.items()})
+
+    def feed(self, chunks: Dict[int, np.ndarray]):
+        """One batched streaming step over all active streams.
+
+        chunks: {sid: (t, F)} — chunk lengths may differ per stream
+        (each stream's state freezes at its own valid length); every
+        chunk must have at least one frame.  Returns
+        {sid: (vals (t, k), idx (t, k))}.  Synchronous wrapper over
+        ``feed_async``.
+        """
+        return self.feed_async(chunks).result()
+
+    def feed_pipelined(self, chunk_iter, *, depth: int = 2):
+        """Drive ``feed_async`` over an iterator of chunk dicts with a
+        ``depth``-deep in-flight window, yielding each step's results in
+        order.  While step *n* computes on device, step *n+1* is already
+        assembled and its H2D transfer issued — the interactive path's
+        double-buffered feed.  Results are identical to sequential
+        ``feed()`` calls (pinned in tests/test_serve_engine.py)."""
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        pending: deque = deque()
+        for chunks in chunk_iter:
+            pending.append(self.feed_async(chunks))
+            while len(pending) >= depth:
+                yield pending.popleft().result()
+        while pending:
+            yield pending.popleft().result()

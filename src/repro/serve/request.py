@@ -4,10 +4,10 @@ The queue is payload-agnostic: one request = one unit of work — a
 (T, F) feature matrix for the acoustic model, a TokenRequest for the
 token-LM decode surface.  It is deliberately simple and
 single-threaded: the engine drains it in arrival order, the batcher
-regroups for padding efficiency (or generation rounds regroup by prompt
-length), and completion order is therefore *not* arrival order —
-results are keyed by request id and the queue tracks completeness so
-callers can assert nothing was dropped.
+regroups for padding efficiency (or the continuous batcher admits the
+queue head into freed decode slots mid-flight), and completion order is
+therefore *not* arrival order — results are keyed by request id and the
+queue tracks completeness so callers can assert nothing was dropped.
 """
 from __future__ import annotations
 

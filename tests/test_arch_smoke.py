@@ -87,6 +87,92 @@ def test_decode_smoke(arch):
 
 
 @pytest.mark.parametrize("arch", [
+    "qwen2.5-3b",                           # rope + GQA, linear cache
+    pytest.param("gemma3-27b", marks=pytest.mark.slow),        # swa ring
+    pytest.param("deepseek-v3-671b", marks=pytest.mark.slow),  # mla latent
+    pytest.param("recurrentgemma-2b", marks=pytest.mark.slow)])  # rglru
+def test_per_row_cache_matches_scalar(arch):
+    """A per-row position cache run in lockstep is bitwise-identical to
+    the scalar-position cache — the shape-compatible special case the
+    continuous batcher's parity rests on (ring indexing, masking and
+    RoPE lookups row-indexed vs shared)."""
+    cfg = reduced(get_arch(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(1))
+    rng = np.random.default_rng(5)
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, (2, 8)), jnp.int32)
+    c_s = model.init_cache(2, 12, jnp.float32)
+    c_r = model.init_cache(2, 12, jnp.float32, per_row=True)
+    assert c_r["pos"].shape == (2,) and c_s["pos"].shape == ()
+    step = jax.jit(model.decode_step)
+    for t in range(8):
+        lg_s, c_s = step(params, c_s, toks[:, t:t + 1])
+        lg_r, c_r = step(params, c_r, toks[:, t:t + 1])
+        np.testing.assert_array_equal(np.asarray(lg_r), np.asarray(lg_s))
+    np.testing.assert_array_equal(np.asarray(c_r["pos"]), [8, 8])
+
+
+def test_per_row_ragged_reset_matches_solo():
+    """Rows at *different* positions in one batch: row 1 is admitted
+    mid-decode via reset_cache_rows and fed its own stream — each row's
+    logits match its solo decode (row purity + per-row positions)."""
+    cfg = reduced(get_arch("qwen2.5-3b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(1))
+    rng = np.random.default_rng(6)
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, (2, 10)), jnp.int32)
+    step = jax.jit(model.decode_step)
+    cache = model.init_cache(2, 16, jnp.float32, per_row=True)
+    for t in range(4):                     # row 0 runs alone (row 1 junk)
+        feed = jnp.stack([toks[0, t:t + 1], jnp.asarray([7], jnp.int32)])
+        _, cache = step(params, cache, feed)
+    cache = jax.jit(model.reset_cache_rows)(cache,
+                                            jnp.asarray([False, True]))
+    np.testing.assert_array_equal(np.asarray(cache["pos"]), [4, 0])
+    got = {0: [], 1: []}
+    for t in range(6):                     # ragged: rows 4 positions apart
+        feed = jnp.stack([toks[0, 4 + t:5 + t], toks[1, t:t + 1]])
+        lg, cache = step(params, cache, feed)
+        got[0].append(np.asarray(lg[0, 0]))
+        got[1].append(np.asarray(lg[1, 0]))
+    for row, start in ((0, 4), (1, 0)):
+        solo_cache = model.init_cache(1, 16, jnp.float32, per_row=True)
+        ref = []
+        for t in range(start + 6):
+            lg, solo_cache = step(params, solo_cache,
+                                  toks[row:row + 1, t:t + 1])
+            ref.append(np.asarray(lg[0, 0]))
+        np.testing.assert_allclose(np.stack(got[row]),
+                                   np.stack(ref[start:]), atol=1e-4)
+
+
+@pytest.mark.slow
+def test_whisper_per_row_decode_smoke():
+    """The enc-dec arch also exposes the per-row surface: positions
+    advance per row and reset_cache_rows keeps the cross-attention K/V
+    (encoder side) while zeroing the self-attention rows."""
+    cfg = reduced(get_arch("whisper-medium"))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    enc = jnp.asarray(np.random.default_rng(7).normal(
+        size=(2, 12, cfg.d_model)) * 0.1, jnp.float32)
+    cache = model.init_cache(2, 12, jnp.float32, per_row=True)
+    cache = model.prefill_cache(params, enc, cache)
+    step = jax.jit(model.decode_step)
+    toks = jnp.array([[1], [2]], jnp.int32)
+    for _ in range(3):
+        logits, cache = step(params, cache, toks)
+        toks = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    np.testing.assert_array_equal(np.asarray(cache["pos"]), [3, 3])
+    ck_before = np.asarray(cache["ck"])
+    cache = model.reset_cache_rows(cache, jnp.asarray([True, False]))
+    np.testing.assert_array_equal(np.asarray(cache["pos"]), [0, 3])
+    np.testing.assert_array_equal(np.asarray(cache["ck"]), ck_before)
+    assert float(jnp.abs(cache["k"][:, 0]).max()) == 0.0   # row 0 zeroed
+
+
+@pytest.mark.parametrize("arch", [
     "qwen2.5-3b",
     pytest.param("xlstm-350m", marks=pytest.mark.slow),
     pytest.param("recurrentgemma-2b", marks=pytest.mark.slow),

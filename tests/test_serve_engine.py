@@ -198,6 +198,96 @@ def test_stream_state_carry_equals_full(student):
                                atol=1e-5)
 
 
+def test_feed_rejects_zero_frame_chunk(student):
+    """A (0, F) chunk would write lens[sid]=0 and waste a batched step —
+    refused at the API boundary; an empty chunks dict (every stream
+    closed / nothing to feed) is an explicit no-op that dispatches no
+    forward."""
+    _, params = student
+    eng = StreamingEngine(STUDENT, params, k=K, policy=LATENCY, n_slots=2)
+    sid = eng.open_stream()
+    with pytest.raises(ValueError, match="zero-frame"):
+        eng.feed({sid: np.zeros((0, F), np.float32)})
+    # the rejected call left the stream usable
+    out = eng.feed({sid: np.zeros((3, F), np.float32)})
+    assert out[sid][0].shape == (3, K)
+    # all-slots-closed edge: no step dispatched for an empty feed
+    eng.close_stream(sid)
+    calls = {"n": 0}
+    real = eng._stream_fwd
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    eng._stream_fwd = counting
+    assert eng.feed({}) == {}
+    assert calls["n"] == 0
+    with pytest.raises(ValueError):        # closed stream still refused
+        eng.feed({sid: np.zeros((3, F), np.float32)})
+
+
+def test_feed_pipelined_matches_sequential(student):
+    """The double-buffered feed driver (feed_async staged ahead of the
+    in-flight step) yields results identical to sequential feed()."""
+    model, params = student
+    rng = np.random.default_rng(12)
+    x0, x1 = _utts(rng, [50, 37])
+
+    def chunk_iter():
+        for lo in range(0, 50, 16):
+            chunks = {}
+            if lo < 50:
+                chunks[0] = x0[lo:lo + 16]
+            if lo < 37:
+                chunks[1] = x1[lo:lo + 16]
+            yield chunks
+
+    eng_seq = StreamingEngine(STUDENT, params, k=K, policy=LATENCY,
+                              n_slots=3)
+    eng_seq.open_stream(), eng_seq.open_stream()
+    seq = [eng_seq.feed(c) for c in chunk_iter()]
+    eng_pipe = StreamingEngine(STUDENT, params, k=K, policy=LATENCY,
+                               n_slots=3)
+    eng_pipe.open_stream(), eng_pipe.open_stream()
+    pipe = list(eng_pipe.feed_pipelined(chunk_iter(), depth=2))
+    assert len(seq) == len(pipe)
+    for a, b in zip(seq, pipe):
+        assert sorted(a) == sorted(b)
+        for sid in a:
+            np.testing.assert_array_equal(a[sid][1], b[sid][1])
+            np.testing.assert_array_equal(a[sid][0], b[sid][0])
+    # a StreamFeed result is idempotent (second call returns the cache)
+    pend = eng_pipe.feed_async({0: x0[:8]})
+    r1 = pend.result()
+    assert r1 is pend.result()
+
+
+def test_padding_efficiency_counts_dead_rows():
+    """Tail batches with fewer real rows than policy.max_batch still pay
+    for the dummy rows: padded_frames == max_batch * T_bucket regardless
+    of n_real, and padding_efficiency reflects exactly that accounting
+    (the same numbers benchmarks/serve_bench.py reports)."""
+    rng = np.random.default_rng(13)
+    # 6 requests, max_batch 4 -> one full batch + a 2-real-row tail
+    reqs = [InferenceRequest(i, f) for i, f in
+            enumerate(_utts(rng, [10, 12, 14, 16, 9, 11]))]
+    pol = BatchPolicy("t", max_batch=4, bucket_multiple=16,
+                      sort_by_length=True)
+    batches = form_batches(reqs, pol)
+    assert [b.n_real for b in batches] == [4, 2]
+    for b in batches:
+        t_bucket = b.feats.shape[1]
+        assert b.padded_frames == pol.max_batch * t_bucket   # dead rows in
+        assert b.frames == sum(r.length for r in b.requests)
+        assert (b.lens[b.n_real:] == 0).all()
+    eff = padding_efficiency(batches)
+    useful = sum(r.length for r in reqs)
+    total = sum(b.padded_frames for b in batches)
+    assert eff == useful / total
+    assert eff < 1.0                        # the tail's dead rows count
+
+
 # ------------------------------------------------- queue completeness
 
 def test_queue_ordering_and_completeness(student):
@@ -400,21 +490,43 @@ def test_engine_kernel_topk_impl(student):
 
 # ------------------------------------------------------- token server
 
-def test_token_server_rounds():
-    """Generation rounds: mixed prompt lengths complete, equal-length
-    prompts batch together, outputs are deterministic, and overflowing
-    requests are refused up front (cache ring-buffer wrap protection)."""
-    from repro.configs import get_arch, reduced
-    from repro.serve import TokenServer
+LM_CFG = {}
 
-    cfg = reduced(get_arch("qwen2.5-3b"))
-    model = build_model(cfg)
-    params = model.init(jax.random.key(0))
+
+def _lm():
+    """Shared reduced token-LM config/params (compile caches reused)."""
+    if not LM_CFG:
+        from repro.configs import get_arch, reduced
+        cfg = reduced(get_arch("qwen2.5-3b"))
+        model = build_model(cfg)
+        LM_CFG["cfg"] = cfg
+        LM_CFG["params"] = model.init(jax.random.key(0))
+    return LM_CFG["cfg"], LM_CFG["params"]
+
+
+def _solo_decode(cfg, params, prompt, max_new, max_seq=64):
+    """Reference: one request alone through a 1-slot continuous server."""
+    from dataclasses import replace
+    from repro.serve import TokenServer
+    srv = TokenServer(cfg, params, max_seq=max_seq,
+                      policy=replace(LATENCY, max_batch=1))
+    rid = srv.submit(prompt, max_new=max_new)
+    return srv.drain()[rid].out
+
+
+@pytest.mark.parametrize("server", ["continuous", "rounds"])
+def test_token_server_basics(server):
+    """Both engines: mixed prompt lengths complete, outputs are
+    deterministic, overflowing / empty requests are refused up front,
+    and drain() evicts its completions."""
+    from repro.serve import RoundTokenServer, TokenServer
+    cls = TokenServer if server == "continuous" else RoundTokenServer
+    cfg, params = _lm()
     rng = np.random.default_rng(0)
     prompts = [rng.integers(1, cfg.vocab_size, L) for L in (5, 5, 8, 5)]
 
     def run():
-        srv = TokenServer(cfg, params, max_seq=64)
+        srv = cls(cfg, params, max_seq=64)
         rids = [srv.submit(p, max_new=4) for p in prompts]
         return srv, rids, srv.drain()
 
@@ -434,17 +546,15 @@ def test_token_server_rounds():
     assert sorted(done3) == [extra]
 
 
-def test_token_server_failure_restores_round():
-    """A serve-step failure mid-round strands nothing: the round returns
+@pytest.mark.parametrize("server", ["continuous", "rounds"])
+def test_token_server_failure_restores(server):
+    """A serve-step failure mid-flight strands nothing: requests return
     to pending with outputs reset, and a retry completes cleanly."""
-    from repro.configs import get_arch, reduced
-    from repro.serve import TokenServer
-
-    cfg = reduced(get_arch("qwen2.5-3b"))
-    model = build_model(cfg)
-    params = model.init(jax.random.key(0))
+    from repro.serve import RoundTokenServer, TokenServer
+    cls = TokenServer if server == "continuous" else RoundTokenServer
+    cfg, params = _lm()
     rng = np.random.default_rng(2)
-    srv = TokenServer(cfg, params, max_seq=32)
+    srv = cls(cfg, params, max_seq=32)
     rids = [srv.submit(rng.integers(1, cfg.vocab_size, 5), max_new=3)
             for _ in range(2)]
     good = srv.serve
@@ -464,25 +574,185 @@ def test_token_server_failure_restores_round():
 
 
 def test_token_server_batched_equals_solo():
-    """The headline decode fix: a batched round must produce exactly the
+    """The headline decode fix: a batched slot must produce exactly the
     tokens each prompt gets when served alone (the seed's per-slot
     prefill corrupted concurrent slots' caches)."""
-    from dataclasses import replace
-    from repro.configs import get_arch, reduced
     from repro.serve import TokenServer
 
-    cfg = reduced(get_arch("qwen2.5-3b"))
-    model = build_model(cfg)
-    params = model.init(jax.random.key(0))
+    cfg, params = _lm()
     rng = np.random.default_rng(1)
     prompts = [rng.integers(1, cfg.vocab_size, 6) for _ in range(3)]
 
-    srv = TokenServer(cfg, params, max_seq=32)      # one round of 3
+    srv = TokenServer(cfg, params, max_seq=32)
     rids = [srv.submit(p, max_new=4) for p in prompts]
     batched = srv.drain()
-    solo_srv = TokenServer(cfg, params, max_seq=32,
-                           policy=replace(LATENCY, max_batch=1))
     for rid, p in zip(rids, prompts):
-        srid = solo_srv.submit(p, max_new=4)
-        solo = solo_srv.drain()
-        assert batched[rid].out == solo[srid].out
+        assert batched[rid].out == _solo_decode(cfg, params, p, 4,
+                                                max_seq=32)
+
+
+# --------------------------------------------- continuous batching
+
+def test_continuous_lockstep_matches_rounds():
+    """Acceptance bar: on a lockstep workload (equal prompt lengths,
+    equal max_new) the continuous engine is token-identical to the
+    generation-round engine."""
+    from repro.serve import RoundTokenServer, TokenServer
+    cfg, params = _lm()
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, cfg.vocab_size, 7) for _ in range(4)]
+    r_srv = RoundTokenServer(cfg, params, max_seq=64)
+    r_ids = [r_srv.submit(p, max_new=5) for p in prompts]
+    r_done = r_srv.drain()
+    c_srv = TokenServer(cfg, params, max_seq=64)
+    c_ids = [c_srv.submit(p, max_new=5) for p in prompts]
+    c_done = c_srv.drain()
+    for a, b in zip(r_ids, c_ids):
+        assert r_done[a].out == c_done[b].out
+
+
+def test_continuous_ragged_matches_solo():
+    """Mixed prompt lengths AND mixed max_new — more requests than
+    slots, so freed slots admit mid-flight — every request's tokens
+    equal its solo decode."""
+    from repro.serve import TokenServer
+    cfg, params = _lm()
+    rng = np.random.default_rng(4)
+    lens = [3, 9, 5, 12, 7, 4]
+    max_new = [5, 2, 9, 4, 7, 3]
+    prompts = [rng.integers(1, cfg.vocab_size, L) for L in lens]
+    srv = TokenServer(cfg, params, max_seq=64)      # 4 slots (LATENCY)
+    rids = [srv.submit(p, m) for p, m in zip(prompts, max_new)]
+    done = srv.drain()
+    assert sorted(done) == sorted(rids)
+    assert srv.stats["admitted"] == len(rids)
+    for rid, p, m in zip(rids, prompts, max_new):
+        assert done[rid].out == _solo_decode(cfg, params, p, m)
+    # retired slots are excluded from the cost accounting
+    assert srv.stats["active_slot_steps"] < srv.stats["slot_steps"]
+
+
+def test_continuous_sync_count_is_steps_over_k():
+    """The per-step device→host sync regression: host syncs per drain
+    must be O(steps / sync_every), not O(steps)."""
+    from repro.serve import TokenServer
+    cfg, params = _lm()
+    rng = np.random.default_rng(5)
+    k = 4
+    srv = TokenServer(cfg, params, max_seq=64, sync_every=k)
+    # 4 equal requests, one admission wave: 5 prefill + 7 decode = 12
+    # consumed tokens per row -> exactly ceil(12 / 4) = 3 windows
+    rids = [srv.submit(rng.integers(1, cfg.vocab_size, 5), max_new=8)
+            for _ in range(4)]
+    done = srv.drain()
+    assert sorted(done) == sorted(rids)
+    assert srv.stats["steps"] == 12
+    assert srv.stats["syncs"] == 3          # == steps / k, not steps
+    assert srv.stats["syncs"] * k == srv.stats["steps"]
+
+
+def test_continuous_early_retirement_and_admission():
+    """max_new=[1, 64]: the short request's completion latency is one
+    sync window, independent of the long request, and its freed slot
+    admits queued work mid-flight."""
+    from dataclasses import replace
+    from repro.serve import TokenServer
+    cfg, params = _lm()
+    rng = np.random.default_rng(6)
+    srv = TokenServer(cfg, params, max_seq=80,
+                      policy=replace(LATENCY, max_batch=2), sync_every=4)
+    p_short = rng.integers(1, cfg.vocab_size, 3)
+    p_long = rng.integers(1, cfg.vocab_size, 3)
+    rid_s = srv.submit(p_short, max_new=1)
+    rid_l = srv.submit(p_long, max_new=64)
+    first = srv.pump()
+    # short done after ONE window (3 prefill + its single token < 4
+    # steps); the long row is still mid-flight
+    assert rid_s in first and first[rid_s].out == _solo_decode(
+        cfg, params, p_short, 1, max_seq=80)
+    assert rid_l not in first and srv.n_active == 1
+    assert first[rid_s].finished_sync == 1
+    # the freed slot admits a queued request while the long one runs
+    p_mid = rng.integers(1, cfg.vocab_size, 4)
+    rid_m = srv.submit(p_mid, max_new=2)
+    mid_done = {}
+    for _ in range(3):
+        mid_done.update(srv.pump())
+    assert rid_m in mid_done and srv.n_active == 1      # long still going
+    assert mid_done[rid_m].out == _solo_decode(cfg, params, p_mid, 2,
+                                               max_seq=80)
+    rest = srv.drain()
+    assert rid_l in rest
+    assert rest[rid_l].out == _solo_decode(cfg, params, p_long, 64,
+                                           max_seq=80)
+    assert rest[rid_l].finished_sync > first[rid_s].finished_sync
+
+
+def test_continuous_admission_failure_restores():
+    """A failure during slot admission (the jitted row reset) recovers
+    like a window failure: nothing stranded, no stale slot state, and a
+    retry produces the correct tokens."""
+    from repro.serve import TokenServer
+    cfg, params = _lm()
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(1, cfg.vocab_size, 5) for _ in range(2)]
+    srv = TokenServer(cfg, params, max_seq=32)
+    rids = [srv.submit(p, max_new=3) for p in prompts]
+    good = srv._reset
+
+    def boom(*_a, **_kw):
+        raise RuntimeError("injected reset failure")
+
+    srv._reset = boom
+    with pytest.raises(RuntimeError):
+        srv.drain()
+    assert srv.queue.n_pending == 2 and srv.queue.n_in_flight == 0
+    assert srv.n_active == 0
+    srv._reset = good
+    done = srv.drain()
+    assert sorted(done) == sorted(rids)
+    for rid, p in zip(rids, prompts):
+        assert done[rid].out == _solo_decode(cfg, params, p, 3, max_seq=32)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["xlstm-350m", "recurrentgemma-2b"])
+def test_continuous_recurrent_arch_matches_solo(arch):
+    """Recurrent-mixer archs through the continuous batcher: their conv
+    states come back in compute dtype, so the fused window's carry must
+    be dtype-settled at init (regression for the lax.scan dtype
+    mismatch); outputs equal solo decode."""
+    from dataclasses import replace
+    from repro.configs import get_arch, reduced
+    from repro.serve import TokenServer
+    cfg = reduced(get_arch(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(1, cfg.vocab_size, L) for L in (3, 6, 4)]
+    max_new = [4, 2, 5]
+    pol = replace(LATENCY, max_batch=2)
+    srv = TokenServer(cfg, params, max_seq=32, policy=pol)
+    rids = [srv.submit(p, m) for p, m in zip(prompts, max_new)]
+    done = srv.drain()
+    solo = TokenServer(cfg, params, max_seq=32,
+                       policy=replace(pol, max_batch=1))
+    for rid, p, m in zip(rids, prompts, max_new):
+        srid = solo.submit(p, max_new=m)
+        assert done[rid].out == solo.drain()[srid].out
+
+
+def test_continuous_eos_retirement():
+    """A row retires at eos_id mid-window: output stops at (and
+    includes) the EOS token, and the slot frees for new work."""
+    from repro.serve import TokenServer
+    cfg, params = _lm()
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(1, cfg.vocab_size, 5)
+    free_run = _solo_decode(cfg, params, prompt, 6)
+    eos = free_run[0]                       # greedy decode will hit it
+    srv = TokenServer(cfg, params, max_seq=64, eos_id=eos)
+    rid = srv.submit(prompt, max_new=6)
+    done = srv.drain()
+    assert done[rid].out == [eos]
+    assert srv.n_active == 0
