@@ -1,6 +1,6 @@
 """Serving load generator: AM batch inference + token-LM decode.
 
-Two measured sections, one JSON record:
+Three measured sections, one JSON record:
 
 **AM** — naive per-utterance loop vs the batched engine.  The paper's
 target-generation system is throughput-bound batch inference (§3.2.2);
@@ -17,6 +17,12 @@ positions, mid-flight admit/retire, one host sync per window) on a
 ragged-prompt workload.  Asserts continuous >= ``--assert-speedup`` x
 round (the tier2-serve CI gate) and that both engines' outputs are
 token-identical to sequential (one-request-at-a-time) decoding.
+
+**Paged** — the block-table paged KV cache vs contiguous slots: token
+parity on the ragged workload, peak KV bytes (pages actually in flight
+vs the fixed ``slots x max_seq`` layout — asserted strictly below),
+prefix-cache hit rate on a shared-prefix workload, and a prompt longer
+than the contiguous ``max_seq`` served through the page pool.
 
   PYTHONPATH=src python benchmarks/serve_bench.py
   PYTHONPATH=src python benchmarks/serve_bench.py --n-utts 128 --policy latency
@@ -206,6 +212,104 @@ def decode_bench(args) -> dict:
             "host_syncs": stats["syncs"], "decode_steps": stats["steps"]}
 
 
+def paged_bench(args) -> dict:
+    """Paged KV cache vs contiguous slots: token parity on a ragged
+    workload, memory-per-token accounting (peak pages x page bytes must
+    beat slots x max_seq), prefix-cache hit rate on a shared-prefix
+    workload, and the long-prompt capability the contiguous layout
+    refuses outright."""
+    from dataclasses import replace
+
+    from repro.configs import get_arch, reduced
+    from repro.models.paging import PagedCacheConfig, paged_token_bytes
+    from repro.serve import LATENCY, TokenServer
+
+    cfg = reduced(get_arch(args.decode_arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    pol = replace(LATENCY, max_batch=args.decode_slots,
+                  sync_every=args.sync_every)
+    max_seq = 64
+    paging = PagedCacheConfig(page_size=args.page_size,
+                              n_pages=args.pages,
+                              max_ctx=max_seq)
+    tok_bytes = paged_token_bytes(cfg, jnp.bfloat16)
+
+    # --- parity + memory on the same ragged workload as decode_bench
+    work = make_decode_workload(cfg.vocab_size, args.decode_requests,
+                                ragged=True, seed=2)
+    cont = TokenServer(cfg, params, policy=pol, max_seq=max_seq)
+    page = TokenServer(cfg, params, policy=pol, paging=paging,
+                       prefix_cache=False)
+    wall_c, tok_c, out_c, _ = decode_run(cont, work)
+    for key in page.alloc.stats:
+        page.alloc.stats[key] = 0
+    wall_p, tok_p, out_p, _ = decode_run(page, work)
+    parity = out_c == out_p
+    peak_pages = page.alloc.stats["peak_pages"]
+    paged_bytes = peak_pages * paging.page_size * tok_bytes
+    cont_bytes = args.decode_slots * max_seq * tok_bytes
+    mem_ratio = paged_bytes / cont_bytes
+    page.alloc.check()
+
+    # --- prefix caching: N requests sharing one long prompt prefix
+    rng = np.random.default_rng(7)
+    pre = rng.integers(1, cfg.vocab_size, 2 * args.page_size)
+    shared = [(np.concatenate([pre, rng.integers(
+        1, cfg.vocab_size, int(rng.integers(1, 8)))]),
+        int(rng.integers(4, 10))) for _ in range(12)]
+    pref = TokenServer(cfg, params, policy=pol, paging=paging)
+    decode_run(pref, shared)
+    s = pref.paging_stats()
+    sharable = s["hits"] + s["misses"]
+    hit_rate = s["hits"] / max(sharable, 1)
+
+    # --- long prompt: beyond the contiguous budget entirely
+    big = PagedCacheConfig(page_size=args.page_size,
+                           n_pages=args.pages, max_ctx=2 * max_seq)
+    long_prompt = rng.integers(1, cfg.vocab_size, max_seq + 16)
+    refused = False
+    try:
+        cont.submit(long_prompt, max_new=4)
+    except ValueError:
+        refused = True
+    long_srv = TokenServer(cfg, params, policy=pol, paging=big)
+    rid = long_srv.submit(long_prompt, max_new=4)
+    long_out = long_srv.drain()[rid].out
+    solo = TokenServer(cfg, params, max_seq=2 * max_seq,
+                       policy=replace(pol, max_batch=1))
+    srid = solo.submit(long_prompt, max_new=4)
+    long_parity = long_out == solo.drain()[srid].out
+
+    print(f"\npaged KV: page_size {paging.page_size}, {paging.n_pages} "
+          f"pages vs {args.decode_slots} slots x {max_seq} contiguous; "
+          f"{tok_bytes} B/token ({cfg.name})")
+    print(f"{'layout':<28}{'peak KV bytes':>14}{'tok/s':>10}")
+    print(f"{'contiguous slots':<28}{cont_bytes:>14,}"
+          f"{tok_c / wall_c:>10.1f}")
+    print(f"{'paged (peak in flight)':<28}{paged_bytes:>14,}"
+          f"{tok_p / wall_p:>10.1f}")
+    print(f"memory/token ratio: {mem_ratio:.2f}x  "
+          f"(parity={parity}, peak {peak_pages} pages)")
+    print(f"prefix cache: {s['hits']}/{sharable} sharable blocks hit "
+          f"({hit_rate:.0%}); long prompt {len(long_prompt)} tokens: "
+          f"contiguous refused={refused}, paged parity={long_parity}")
+    assert parity, "paged != contiguous tokens on the ragged workload"
+    assert long_parity and refused, "long-prompt demo failed"
+    assert hit_rate > 0, "prefix cache never hit on a shared-prefix load"
+    assert paged_bytes < cont_bytes, (
+        f"paged peak {paged_bytes} B not below contiguous {cont_bytes} B")
+    return {"page_size": paging.page_size, "n_pages": paging.n_pages,
+            "token_bytes": tok_bytes, "peak_pages": peak_pages,
+            "paged_peak_bytes": paged_bytes,
+            "contiguous_bytes": cont_bytes, "memory_ratio": mem_ratio,
+            "ragged_parity": parity, "tok_s_paged": tok_p / wall_p,
+            "prefix_hits": s["hits"], "prefix_sharable": sharable,
+            "prefix_hit_rate": hit_rate,
+            "long_prompt_len": int(len(long_prompt)),
+            "long_prompt_parity": long_parity}
+
+
 def pct(xs, q):
     return float(np.percentile(np.asarray(xs), q))
 
@@ -226,6 +330,9 @@ def main(argv=None):
     ap.add_argument("--assert-speedup", type=float, default=1.5,
                     help="fail unless continuous >= this x rounds tok/s "
                          "on the ragged workload (0 disables)")
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--pages", type=int, default=32,
+                    help="paged-KV pool size for the paged section")
     ap.add_argument("--skip-decode", action="store_true")
     args = ap.parse_args(argv)
 
@@ -282,6 +389,7 @@ def main(argv=None):
            "p95_ms": {"naive": pct(lat_naive, 95), "engine": pct(lat_eng, 95)}}
     if not args.skip_decode:
         rec["decode"] = decode_bench(args)
+        rec["paged"] = paged_bench(args)
 
     os.makedirs(args.out, exist_ok=True)
     path = os.path.join(args.out, "serve_bench.json")

@@ -97,9 +97,31 @@ def make_prefill_step(model, cfg):
 
 
 def make_serve_step(model, cfg, *, greedy: bool = True):
-    """One decode step: next-token logits + updated cache."""
-    def serve_step(params, cache, tokens):
+    """One decode step: next-token + logits + updated cache.
+
+    ``greedy=False`` returns a step taking an extra ``samp`` dict of
+    (B,)-shaped per-row knobs (``temperature``/``top_k``/``top_p``/
+    ``seed``); rows with temperature <= 0 still take bitwise argmax.
+    The sampling key is derived from the *pre-step* cache position so a
+    request samples identically regardless of batch composition.
+    """
+    if greedy:
+        def serve_step(params, cache, tokens):
+            logits, cache = model.decode_step(params, cache, tokens)
+            nxt = jnp.argmax(logits[:, -1],
+                             axis=-1).astype(jnp.int32)[:, None]
+            return nxt, logits, cache
+        return serve_step
+
+    # serve package imports this module at import time; import the
+    # sampler lazily to keep the edge one-directional
+    from repro.serve.sampling import sample_tokens
+
+    def serve_step_sample(params, cache, tokens, samp):
+        pos = cache["pos"]
         logits, cache = model.decode_step(params, cache, tokens)
-        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        nxt = sample_tokens(logits[:, -1], samp["temperature"],
+                            samp["top_k"], samp["top_p"], samp["seed"],
+                            pos)[:, None]
         return nxt, logits, cache
-    return serve_step
+    return serve_step_sample

@@ -27,12 +27,18 @@ from repro.models.transformer import Transformer
 from repro.models.whisper import Whisper
 
 
-def build_model(cfg: ModelConfig):
+def build_model(cfg: ModelConfig, *, paging=None):
+    """``paging`` (a ``models.paging.PagedCacheConfig``) switches the
+    decode cache of attention-family models to the paged pool layout;
+    training/prefill and the contiguous decode path are unaffected."""
     if cfg.family == "lstm_am":
+        if paging is not None:
+            raise ValueError("the LSTM acoustic model has no KV cache "
+                             "to page")
         return LstmAM(cfg)
     if cfg.encoder is not None:
-        return Whisper(cfg)
-    return Transformer(cfg)
+        return Whisper(cfg, paging=paging)
+    return Transformer(cfg, paging=paging)
 
 
 def supports_streaming(cfg: ModelConfig) -> bool:

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import layers
+from repro.models import paging as paging_mod
 
 NEG_INF = -1e30
 
@@ -198,8 +199,14 @@ def attention_apply(params, cfg, spec, x, positions):
 
 # ---------------------------------------------------------------- decode
 
-def init_attn_cache(cfg, spec, batch, seq_len, dtype):
+def init_attn_cache(cfg, spec, batch, seq_len, dtype, paging=None):
     hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    if paging is not None and paging_mod.is_paged_spec(spec):
+        # pooled layout: no batch axis — rows reach their pages through
+        # the shared block table (cache root "pages"); see models/paging
+        slots = paging.pool_slots
+        return {"k": jnp.zeros((slots, hkv, hd), dtype),
+                "v": jnp.zeros((slots, hkv, hd), dtype)}
     slots = min(spec.window, seq_len) if (spec.mixer == "swa" and spec.window) \
         else seq_len
     return {"k": jnp.zeros((batch, hkv, slots, hd), dtype),
@@ -220,38 +227,63 @@ def row_update(cache_arr, new, slot, *, axis=2):
     return jnp.where(m, new, cache_arr)
 
 
-def attention_decode(params, cfg, spec, x, cache, pos):
+def attention_decode(params, cfg, spec, x, cache, pos, pages=None):
     """One-token decode. x (B,1,D); pos int32: a scalar (all rows in
     lockstep — the legacy shape, kept bitwise) or (B,) per-row positions
     (continuous batching: each row writes and reads its cache at its own
-    position; ring indexing, masking and RoPE become row-indexed)."""
+    position; ring indexing, masking and RoPE become row-indexed).
+
+    A 3-D (pool) cache selects the paged path: the row's K/V live in the
+    pages its block-table row (``pages``) maps, the write is a flat
+    one-hot into the pool, and the read gathers the row's logical
+    context back into the same (B, Hkv, S, hd) layout the contiguous
+    masked-softmax tail consumes (masked columns contribute exact zeros,
+    keeping greedy decode token-identical — tests/test_paged_cache.py)."""
     b = x.shape[0]
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     per_row = pos.ndim == 1 and pos.shape[0] == b
+    paged = cache["k"].ndim == 3
+    if paged and (pages is None or not per_row):
+        raise ValueError("paged attention cache requires per-row positions "
+                         "and a PageRef (cache['pages'])")
     q, k, v = _project_qkv(params, cfg, x,
                            pos[:, None, None] if per_row
                            else (pos[None] if pos.ndim == 0 else pos))
-    slots = cache["k"].shape[2]
-    slot = jax.lax.rem(pos, slots) if slots else pos
-    if per_row:
-        ck = row_update(cache["k"], k.astype(cache["k"].dtype), slot)
-        cv = row_update(cache["v"], v.astype(cache["v"].dtype), slot)
+    if paged:
+        widx = paging_mod.write_index(pages, pos)
+        pool_k = paging_mod.pool_write(cache["k"], k[:, :, 0], widx)
+        pool_v = paging_mod.pool_write(cache["v"], v[:, :, 0], widx)
+        gidx = paging_mod.gather_indices(pages)          # (B, max_ctx)
+        ck = pool_k[gidx].transpose(0, 2, 1, 3)          # (B, Hkv, S, hd)
+        cv = pool_v[gidx].transpose(0, 2, 1, 3)
+        slots = gidx.shape[1]
+        valid = jnp.arange(slots) <= pos[:, None]
+        new_cache = {"k": pool_k, "v": pool_v}
     else:
-        ck = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), slot, axis=2)
-        cv = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), slot, axis=2)
-    # positions held by each cache slot (ring for swa, linear otherwise);
-    # per-row, pos (B,1) broadcasts against idx (slots,) -> (B, slots)
-    idx = jnp.arange(slots)
-    posb = pos[:, None] if per_row else pos
-    if spec.mixer == "swa" and spec.window and slots < 2**30:
-        # slot j holds position: the latest p <= pos with p % slots == j
-        kpos = posb - jax.lax.rem(posb - idx, slots)
-        kpos = jnp.where(kpos > posb, kpos - slots, kpos)  # safety
-        valid = (kpos >= 0) & (posb - kpos < spec.window) & (kpos <= posb)
-    else:
-        valid = idx <= posb
+        slots = cache["k"].shape[2]
+        slot = jax.lax.rem(pos, slots) if slots else pos
+        if per_row:
+            ck = row_update(cache["k"], k.astype(cache["k"].dtype), slot)
+            cv = row_update(cache["v"], v.astype(cache["v"].dtype), slot)
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), slot, axis=2)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), slot, axis=2)
+        new_cache = {"k": ck, "v": cv}
+        # positions held by each cache slot (ring for swa, linear
+        # otherwise); per-row, pos (B,1) broadcasts against idx (slots,)
+        # -> (B, slots)
+        idx = jnp.arange(slots)
+        posb = pos[:, None] if per_row else pos
+        if spec.mixer == "swa" and spec.window and slots < 2**30:
+            # slot j holds position: the latest p <= pos, p % slots == j
+            kpos = posb - jax.lax.rem(posb - idx, slots)
+            kpos = jnp.where(kpos > posb, kpos - slots, kpos)  # safety
+            valid = (kpos >= 0) & (posb - kpos < spec.window) \
+                & (kpos <= posb)
+        else:
+            valid = idx <= posb
     scale = 1.0 / np.sqrt(hd)
     qg = q.reshape(b, hkv, hq // hkv, 1, hd)
     s_ = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
@@ -264,4 +296,4 @@ def attention_decode(params, cfg, spec, x, cache, pos):
     o = jnp.einsum("bhgqk,bhkd->bhgqd", p, cv.astype(jnp.float32))
     o = o.reshape(b, hq, 1, hd).transpose(0, 2, 1, 3).reshape(b, 1, hq * hd)
     o = o.astype(x.dtype) @ params["wo"].astype(x.dtype)
-    return o, {"k": ck, "v": cv}
+    return o, new_cache

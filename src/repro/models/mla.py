@@ -93,36 +93,59 @@ def mla_apply(params, cfg, x, positions):
     return o @ params["wo"].astype(x.dtype)
 
 
-def init_mla_cache(cfg, batch, seq_len, dtype):
+def init_mla_cache(cfg, batch, seq_len, dtype, paging=None):
     m = cfg.mla
+    if paging is not None:
+        # pooled latent cache (no batch axis): rows reach their pages
+        # through the shared block table — see models/paging
+        slots = paging.pool_slots
+        return {"c_kv": jnp.zeros((slots, m.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((slots, m.qk_rope_head_dim), dtype)}
     return {"c_kv": jnp.zeros((batch, seq_len, m.kv_lora_rank), dtype),
             "k_rope": jnp.zeros((batch, seq_len, m.qk_rope_head_dim), dtype)}
 
 
-def mla_decode(params, cfg, x, cache, pos):
+def mla_decode(params, cfg, x, cache, pos, pages=None):
     """Absorbed single-token decode. x (B,1,D); pos scalar (lockstep rows,
-    kept bitwise) or (B,) per-row positions (continuous batching)."""
+    kept bitwise) or (B,) per-row positions (continuous batching).  A 2-D
+    (pool) latent cache selects the paged path — flat one-hot write, flat
+    gather back to (B, S, rank); see models/paging."""
     m = cfg.mla
     b = x.shape[0]
     h = cfg.n_heads
     scale = 1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
     per_row = pos.ndim == 1 and pos.shape[0] == b
+    paged = cache["c_kv"].ndim == 2
+    if paged and (pages is None or not per_row):
+        raise ValueError("paged MLA cache requires per-row positions and "
+                         "a PageRef (cache['pages'])")
     q_nope, q_rope = _queries(params, cfg, x,
                               pos[:, None, None] if per_row else pos[None])
     c_new, kr_new = _latents(params, cfg, x,
                              pos[:, None] if per_row else pos[None])
-    if per_row:
+    if paged:
+        from repro.models import paging as paging_mod
+        widx = paging_mod.write_index(pages, pos)
+        pool_c = paging_mod.pool_write(cache["c_kv"], c_new[:, 0], widx)
+        pool_kr = paging_mod.pool_write(cache["k_rope"], kr_new[:, 0], widx)
+        gidx = paging_mod.gather_indices(pages)          # (B, max_ctx)
+        c = pool_c[gidx]                                 # (B, S, rank)
+        kr = pool_kr[gidx]                               # (B, S, rope)
+        new_cache = {"c_kv": pool_c, "k_rope": pool_kr}
+    elif per_row:
         c = attn_mod.row_update(
             cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1)
         kr = attn_mod.row_update(
             cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos,
             axis=1)
+        new_cache = {"c_kv": c, "k_rope": kr}
     else:
         c = jax.lax.dynamic_update_slice_in_dim(
             cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1)
         kr = jax.lax.dynamic_update_slice_in_dim(
             cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos,
             axis=1)
+        new_cache = {"c_kv": c, "k_rope": kr}
     # absorb W_uk into the query: q_c (B,H,rank)
     w_uk = params["w_uk"].astype(x.dtype).reshape(m.kv_lora_rank, h,
                                                   m.qk_nope_head_dim)
@@ -145,4 +168,4 @@ def mla_decode(params, cfg, x, cache, pos):
                                                   m.v_head_dim)
     o = jnp.einsum("bhr,rhv->bhv", o_c.astype(x.dtype), w_uv)
     o = o.reshape(b, 1, h * m.v_head_dim)
-    return o @ params["wo"].astype(x.dtype), {"c_kv": c, "k_rope": kr}
+    return o @ params["wo"].astype(x.dtype), new_cache

@@ -1,0 +1,167 @@
+"""Device-side paged KV-cache layout (vLLM-style block tables).
+
+A paged decode cache replaces the contiguous per-row ``(B, ..., max_seq,
+...)`` KV region with a shared **pool** of fixed-size pages plus a
+per-row **block table** mapping logical block -> physical page:
+
+  * each pageable layer stores one pool with ``(n_pages + 1) * page_size``
+    token slots and NO batch axis — attn KV pools are
+    ``(pool_slots, n_kv_heads, head_dim)``, MLA latent pools
+    ``(pool_slots, kv_lora_rank)`` / ``(pool_slots, qk_rope_head_dim)``;
+  * one block table ``(B, max_blocks) int32`` + per-row capacities
+    ``(B,) int32`` live in the cache root (``cache["pages"]``) and are
+    shared by every pageable layer — each layer has its own pool, all
+    pools use the same page ids;
+  * **page 0 is a reserved trash page**: the host allocator only hands
+    out ids ``1..n_pages``, and empty/retired slots (table row zeroed,
+    cap 0) read and write page 0 harmlessly — window overshoot can never
+    corrupt another row's pages.
+
+Only full-context attention layers page (plain ``attn`` mixers and MLA
+latent caches).  Sliding-window rings are already memory-bounded to
+``window`` slots and recurrent states are O(1) per row, so both keep
+their contiguous per-row layout — paging them would add indirection for
+no density win.
+
+Writes and reads stay one-hot/gather (no scatters), matching the
+contiguous per-row path's lowering: a write is an einsum of a
+``(B, pool_slots)`` one-hot against the new values, a read is a flat
+gather of each row's ``max_ctx`` logical slots.  Masked (>= pos) columns
+contribute exact zeros through softmax, so paged attention is
+token-identical to the contiguous path under greedy decoding (pinned in
+tests/test_paged_cache.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class PagedCacheConfig:
+    """Static paging geometry (host + device agree on it).
+
+    page_size: token positions per page.
+    n_pages: allocatable pages in every layer pool (page 0 is extra and
+        reserved as the trash page).
+    max_ctx: logical per-row context capacity (block-table width *
+        page_size).  0 -> ``n_pages * page_size`` (one row may, in
+        principle, own the whole pool).
+    """
+    page_size: int = 16
+    n_pages: int = 64
+    max_ctx: int = 0
+
+    def __post_init__(self):
+        if self.page_size < 1 or self.n_pages < 1:
+            raise ValueError("page_size and n_pages must be >= 1")
+        if self.max_ctx % self.page_size:
+            raise ValueError(
+                f"max_ctx ({self.max_ctx}) must be a multiple of "
+                f"page_size ({self.page_size})")
+
+    @property
+    def resolved_max_ctx(self) -> int:
+        return self.max_ctx or self.n_pages * self.page_size
+
+    @property
+    def max_blocks(self) -> int:
+        return self.resolved_max_ctx // self.page_size
+
+    @property
+    def pool_slots(self) -> int:
+        # +1: page 0, the trash page
+        return (self.n_pages + 1) * self.page_size
+
+
+class PageRef(NamedTuple):
+    """The traced view of the shared block table, built inside
+    ``decode_step`` from ``cache["pages"]`` (page_size stays a static
+    Python int — it shapes the gather index arithmetic)."""
+    tables: jnp.ndarray            # (B, max_blocks) int32, 0 = trash page
+    caps: jnp.ndarray              # (B,) int32 allocated positions per row
+    page_size: int
+
+
+def is_paged_spec(spec) -> bool:
+    """Does this attention-family LayerSpec page?  Windowed swa layers
+    keep their contiguous ring (already bounded to ``window`` slots)."""
+    return not (spec.mixer == "swa" and spec.window)
+
+
+def prefix_sharing_supported(cfg) -> bool:
+    """Prefix pages may only be shared when the *entire* cross-token
+    state of a prompt position lives in pageable pools.  Any swa ring,
+    recurrent state or encoder cross-attention would start a prefix-hit
+    row with stale/zero non-paged state, so those archs admit at pos 0
+    (no sharing) instead of returning wrong tokens."""
+    if cfg.encoder is not None or cfg.family == "lstm_am":
+        return False
+    for seg in cfg.segments:
+        for sp in seg.pattern:
+            if sp.mixer not in ("attn", "swa") or not is_paged_spec(sp):
+                return False
+    return True
+
+
+def paged_token_bytes(cfg, dtype) -> int:
+    """Bytes of pool storage one token position occupies across every
+    pageable layer (the unit of the serve bench's memory accounting)."""
+    item = jnp.dtype(dtype).itemsize
+    total = 0
+    for seg in cfg.segments:
+        for sp in seg.pattern:
+            if sp.mixer in ("attn", "swa") and is_paged_spec(sp):
+                if cfg.mla is not None:
+                    per = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+                else:
+                    per = 2 * cfg.n_kv_heads * cfg.resolved_head_dim
+                total += seg.repeat * per * item
+    if cfg.encoder is not None:
+        # whisper decoder self-attention K/V
+        total = cfg.n_layers * 2 * cfg.n_kv_heads * cfg.resolved_head_dim \
+            * item
+    return total
+
+
+# -------------------------------------------------------- traced helpers
+
+def write_index(pages: PageRef, pos) -> jnp.ndarray:
+    """(B,) flat pool slot where each row writes position ``pos``.
+
+    The position is clamped into the row's allocation: rows past their
+    capacity (retired slots overshooting until the next host sync)
+    rewrite their own last slot, and rows with cap 0 (empty slots, table
+    row zeroed) land in trash page 0 — never in another row's pages."""
+    ps = pages.page_size
+    lpos = jnp.clip(pos, 0, jnp.maximum(pages.caps - 1, 0))
+    blk = lpos // ps
+    page = jnp.take_along_axis(pages.tables, blk[:, None], axis=1)[:, 0]
+    return page * ps + lpos % ps
+
+
+def gather_indices(pages: PageRef) -> jnp.ndarray:
+    """(B, max_blocks * page_size) flat pool slot of every logical
+    position — unallocated blocks (table entry 0) read the trash page
+    and are masked by the ``<= pos`` validity check downstream."""
+    ps = pages.page_size
+    b, nb = pages.tables.shape
+    flat = pages.tables[:, :, None] * ps + jnp.arange(ps)[None, None, :]
+    return flat.reshape(b, nb * ps)
+
+
+def pool_write(pool, new, flat_idx):
+    """Write ``new[b]`` (leading dim B) into ``pool[flat_idx[b]]``.
+
+    One-hot einsum + covered-select instead of a scatter — the paged twin
+    of ``attention.row_update``.  Rows of one batch target disjoint slots
+    (disjoint allocations), except the trash page, where colliding
+    writes sum finite activations — harmless, it is never read validly."""
+    slots = pool.shape[0]
+    m = (jnp.arange(slots)[None, :] == flat_idx[:, None])       # (B, slots)
+    upd = jnp.einsum("bt,b...->t...", m.astype(pool.dtype),
+                     new.astype(pool.dtype))
+    covered = m.any(axis=0).reshape((slots,) + (1,) * (pool.ndim - 1))
+    return jnp.where(covered, upd, pool)

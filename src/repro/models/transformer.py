@@ -76,11 +76,13 @@ def block_apply(params, cfg, spec, x, positions):
     return x, aux
 
 
-def init_block_cache(cfg, spec, batch, seq_len, dtype):
+def init_block_cache(cfg, spec, batch, seq_len, dtype, paging=None):
     if spec.mixer in ("attn", "swa"):
         if cfg.mla is not None:
-            return mla.init_mla_cache(cfg, batch, seq_len, dtype)
-        return attn_mod.init_attn_cache(cfg, spec, batch, seq_len, dtype)
+            return mla.init_mla_cache(cfg, batch, seq_len, dtype,
+                                      paging=paging)
+        return attn_mod.init_attn_cache(cfg, spec, batch, seq_len, dtype,
+                                        paging=paging)
     if spec.mixer == "rglru":
         return recurrent.init_rglru_state(cfg, batch, dtype)
     if spec.mixer == "mlstm":
@@ -90,14 +92,15 @@ def init_block_cache(cfg, spec, batch, seq_len, dtype):
     raise ValueError(spec.mixer)
 
 
-def block_decode(params, cfg, spec, x, cache, pos):
+def block_decode(params, cfg, spec, x, cache, pos, pages=None):
     h = layers.norm_apply(params["norm1"], x, cfg.norm)
     if spec.mixer in ("attn", "swa"):
         if cfg.mla is not None:
-            y, cache = mla.mla_decode(params["mixer"], cfg, h, cache, pos)
+            y, cache = mla.mla_decode(params["mixer"], cfg, h, cache, pos,
+                                      pages=pages)
         else:
             y, cache = attn_mod.attention_decode(params["mixer"], cfg, spec,
-                                                 h, cache, pos)
+                                                 h, cache, pos, pages=pages)
     elif spec.mixer == "rglru":
         y, cache = recurrent.rglru_block_decode(params["mixer"], cfg, h,
                                                 cache)
@@ -123,8 +126,9 @@ def block_decode(params, cfg, spec, x, cache, pos):
 # --------------------------------------------------------------- the model
 
 class Transformer:
-    def __init__(self, cfg):
+    def __init__(self, cfg, paging=None):
         self.cfg = cfg
+        self.paging = paging        # PagedCacheConfig or None (contiguous)
 
     # ---- init ----
     def init(self, key):
@@ -227,12 +231,28 @@ class Transformer:
         row* ((B,) int32) instead of a shared scalar, making ragged
         continuous batching legal: rows may sit at different sequence
         positions within one decode step.  The scalar default keeps every
-        existing lockstep jit bitwise."""
+        existing lockstep jit bitwise.
+
+        With a ``paging`` config (model built via ``build_model(cfg,
+        paging=...)``) the full-attention/MLA caches become shared pools
+        and the cache root carries the block table (``cache["pages"]``);
+        swa rings and recurrent state keep their per-row layout.  Paged
+        caches are per-row only."""
         cfg = self.cfg
+        if self.paging is not None and not per_row:
+            raise ValueError("paged caches are per-row only "
+                             "(init_cache(per_row=True))")
         cache = {"pos": jnp.zeros((batch,) if per_row else (), jnp.int32)}
+        if self.paging is not None:
+            cache["pages"] = {
+                "tables": jnp.zeros((batch, self.paging.max_blocks),
+                                    jnp.int32),
+                "caps": jnp.zeros((batch,), jnp.int32),
+            }
         for si, seg in enumerate(cfg.segments):
             def one(sp):
-                return init_block_cache(cfg, sp, batch, seq_len, dtype)
+                return init_block_cache(cfg, sp, batch, seq_len, dtype,
+                                        paging=self.paging)
             group = {f"p{i}": one(sp) for i, sp in enumerate(seg.pattern)}
             cache[f"seg{si}"] = jax.tree_util.tree_map(
                 lambda a: jnp.broadcast_to(a, (seg.repeat,) + a.shape).copy()
@@ -251,6 +271,12 @@ class Transformer:
                 jnp.clip(pos, 0, params["pos"].shape[0] - 1)]
             x = x + (pe[:, None] if pos.ndim else pe[None, None])
         new_cache = {"pos": pos + 1}
+        pages = None
+        if "pages" in cache:
+            from repro.models.paging import PageRef
+            pages = PageRef(cache["pages"]["tables"], cache["pages"]["caps"],
+                            self.paging.page_size)
+            new_cache["pages"] = cache["pages"]       # host-owned, carried
         for si, seg in enumerate(cfg.segments):
             seg_params = params[f"seg{si}"]
 
@@ -260,7 +286,7 @@ class Transformer:
                 new_gc = {}
                 for i, sp in enumerate(seg.pattern):
                     x, c = block_decode(gp[f"p{i}"], cfg, sp, x,
-                                        gc[f"p{i}"], pos)
+                                        gc[f"p{i}"], pos, pages=pages)
                     new_gc[f"p{i}"] = c
                 return x, new_gc
 
@@ -281,19 +307,45 @@ class Transformer:
         x = layers.norm_apply(params["final_norm"], x, cfg.norm)
         return self.unembed(params, x), new_cache
 
-    def reset_cache_rows(self, cache, rows):
-        """Zero the cache rows selected by the (B,) bool mask ``rows`` and
-        reset their positions to 0 — the continuous batcher's slot
-        admission hook.  Per-row caches only (pos must be (B,)).  KV
-        entries past a row's position are masked out by decode anyway;
-        zeroing everything also covers recurrent/conv state, whose whole
-        content is live."""
+    def reset_cache_rows(self, cache, rows, starts=None):
+        """Reset the cache rows selected by the (B,) bool mask ``rows`` —
+        the continuous batcher's slot admission hook.  Per-row caches
+        only (pos must be (B,)).
+
+        Contiguous mode zeroes everything (KV entries past a row's
+        position are masked out by decode anyway; zeroing also covers
+        recurrent/conv state, whose whole content is live) — bitwise
+        unchanged from before paging existed.  Paged mode leaves the
+        pools alone (a row's stale pages are unreachable once its table
+        row changes; garbage past ``pos`` is masked) and zeroes only the
+        per-row leaves (swa rings, recurrent state).
+
+        ``starts`` ((B,) int32, default 0) is the admitted rows' initial
+        position — nonzero when a prompt prefix was served from the
+        prefix cache and the row resumes mid-prompt."""
+        pos0 = jnp.zeros_like(cache["pos"]) if starts is None else starts
+        new = {"pos": jnp.where(rows, pos0, cache["pos"])}
+
         def zero(a):
             m = rows.reshape((1, -1) + (1,) * (a.ndim - 2))   # (rep, B, ...)
             return jnp.where(m, jnp.zeros((), a.dtype), a)
-        new = {"pos": jnp.where(rows, 0, cache["pos"])}
-        for si in range(len(self.cfg.segments)):
-            new[f"seg{si}"] = jax.tree_util.tree_map(zero, cache[f"seg{si}"])
+
+        if self.paging is None:
+            for si in range(len(self.cfg.segments)):
+                new[f"seg{si}"] = jax.tree_util.tree_map(
+                    zero, cache[f"seg{si}"])
+            return new
+        from repro.models.paging import is_paged_spec
+        new["pages"] = cache["pages"]
+        for si, seg in enumerate(self.cfg.segments):
+            group = {}
+            for i, sp in enumerate(seg.pattern):
+                sub = cache[f"seg{si}"][f"p{i}"]
+                if sp.mixer in ("attn", "swa") and is_paged_spec(sp):
+                    group[f"p{i}"] = sub               # pooled: untouched
+                else:
+                    group[f"p{i}"] = jax.tree_util.tree_map(zero, sub)
+            new[f"seg{si}"] = group
         return new
 
     # ---- MTP auxiliary hidden (deepseek-v3) ----

@@ -80,8 +80,9 @@ def _init_dec_block(key, cfg):
 
 
 class Whisper:
-    def __init__(self, cfg):
+    def __init__(self, cfg, paging=None):
         self.cfg = cfg
+        self.paging = paging        # PagedCacheConfig or None (contiguous)
         self.spec_self = None
         from repro.configs.base import LayerSpec
         self.attn_spec = LayerSpec(mixer="attn", ffn="mlp")
@@ -178,18 +179,38 @@ class Whisper:
                    per_row=False):
         """``per_row=True`` carries a (B,) position vector (ragged
         continuous batching); the scalar default stays bitwise for
-        lockstep callers — see ``Transformer.init_cache``."""
+        lockstep callers — see ``Transformer.init_cache``.  With paging,
+        the decoder self-attention K/V become shared pools addressed
+        through the block table; cross-attention K/V stay contiguous
+        (they belong to the encoder pass, sized by the audio, and are
+        refilled per admission by ``prefill_cache``)."""
         cfg = self.cfg
         h, hd = cfg.n_heads, cfg.resolved_head_dim
         n = cfg.n_layers
-        return {
+        cache = {
             "pos": jnp.zeros((batch,) if per_row else (), jnp.int32),
-            "k": jnp.zeros((n, batch, cfg.n_kv_heads, seq_len, hd), dtype),
-            "v": jnp.zeros((n, batch, cfg.n_kv_heads, seq_len, hd), dtype),
             # cross-attention K/V precomputed from the encoder output
             "ck": jnp.zeros((n, batch, h, seq_len, hd), dtype),
             "cv": jnp.zeros((n, batch, h, seq_len, hd), dtype),
         }
+        if self.paging is not None:
+            if not per_row:
+                raise ValueError("paged caches are per-row only "
+                                 "(init_cache(per_row=True))")
+            slots = self.paging.pool_slots
+            cache["pages"] = {
+                "tables": jnp.zeros((batch, self.paging.max_blocks),
+                                    jnp.int32),
+                "caps": jnp.zeros((batch,), jnp.int32),
+            }
+            cache["k"] = jnp.zeros((n, slots, cfg.n_kv_heads, hd), dtype)
+            cache["v"] = jnp.zeros((n, slots, cfg.n_kv_heads, hd), dtype)
+        else:
+            cache["k"] = jnp.zeros((n, batch, cfg.n_kv_heads, seq_len, hd),
+                                   dtype)
+            cache["v"] = jnp.zeros((n, batch, cfg.n_kv_heads, seq_len, hd),
+                                   dtype)
+        return cache
 
     def prefill_cache(self, params, enc_embeds, cache):
         """Run the encoder and fill cross-attention K/V."""
@@ -214,6 +235,11 @@ class Whisper:
         x = params["embed"][tokens]
         pe = params["dec_pos"].astype(x.dtype)[jnp.clip(pos, 0, MAX_POS - 1)]
         x = x + (pe[:, None] if pos.ndim else pe[None, None])
+        pages = None
+        if "pages" in cache:
+            from repro.models.paging import PageRef
+            pages = PageRef(cache["pages"]["tables"], cache["pages"]["caps"],
+                            self.paging.page_size)
 
         def body(carry, xs):
             x = carry
@@ -221,7 +247,8 @@ class Whisper:
             h = layers.norm_apply(bp["norm1"], x, cfg.norm)
             y, newc = attn_mod.attention_decode(bp["self"], cfg,
                                                 self.attn_spec, h,
-                                                {"k": k_l, "v": v_l}, pos)
+                                                {"k": k_l, "v": v_l}, pos,
+                                                pages=pages)
             x = x + y
             hx = layers.norm_apply(bp["norm_x"], x, cfg.norm)
             # cross attention over cached encoder K/V (all positions valid)
@@ -255,15 +282,20 @@ class Whisper:
         x = layers.norm_apply(params["final_norm"], x, cfg.norm)
         return self.unembed(params, x), new_cache
 
-    def reset_cache_rows(self, cache, rows):
+    def reset_cache_rows(self, cache, rows, starts=None):
         """Zero the self-attention KV rows selected by the (B,) bool mask
         and reset their positions — continuous-batching slot admission.
         Cross-attention K/V is *kept*: it belongs to the encoder pass and
         is refilled by ``prefill_cache`` when the slot's new utterance
-        arrives.  Per-row caches only."""
-        m = rows[None, :, None, None, None]           # (n, B, H, S, hd)
+        arrives.  Per-row caches only.  With paging the self-attention
+        pools are left alone (stale pages become unreachable when the
+        table row changes)."""
+        pos0 = jnp.zeros_like(cache["pos"]) if starts is None else starts
         new = dict(cache)
-        new["pos"] = jnp.where(rows, 0, cache["pos"])
+        new["pos"] = jnp.where(rows, pos0, cache["pos"])
+        if self.paging is not None:
+            return new
+        m = rows[None, :, None, None, None]           # (n, B, H, S, hd)
         for key in ("k", "v"):
             new[key] = jnp.where(m, jnp.zeros((), cache[key].dtype),
                                  cache[key])

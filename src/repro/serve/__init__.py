@@ -8,22 +8,31 @@ different batching policies).
   TokenServer — slot-based continuous batcher for the token-LM serving
       surface (per-row cache positions, mid-flight admit/retire,
       chunked emission sync; launch/serve.py, examples/serve_lm.py).
+      With ``paging=PagedCacheConfig(...)`` the KV cache is a shared
+      page pool with prefix caching (serve/paging.PageAllocator);
+      ``submit(..., sampling=SamplingParams(...))`` enables per-request
+      temperature / top-k / top-p sampling.
   RoundTokenServer — the legacy generation-round engine (lockstep
       baseline for parity tests and benchmarks).
   BatchPolicy / THROUGHPUT / LATENCY — batch-formation policies.
 """
+from repro.models.paging import PagedCacheConfig
 from repro.serve.batcher import (LATENCY, THROUGHPUT, BatchPolicy,
                                  FormedBatch, bucket_length, form_batches,
                                  padding_efficiency)
 from repro.serve.decode import RoundTokenServer, TokenRequest, TokenServer
 from repro.serve.engine import (StreamingEngine, StreamFeed,
                                 make_topk_emitter)
+from repro.serve.paging import PageAllocator, block_hashes
 from repro.serve.request import (CompletedRequest, InferenceRequest,
                                  RequestQueue)
+from repro.serve.sampling import GREEDY, SamplingParams
 
 __all__ = [
     "BatchPolicy", "THROUGHPUT", "LATENCY", "FormedBatch", "bucket_length",
     "form_batches", "padding_efficiency", "StreamingEngine", "StreamFeed",
     "make_topk_emitter", "TokenServer", "RoundTokenServer", "TokenRequest",
     "InferenceRequest", "CompletedRequest", "RequestQueue",
+    "PagedCacheConfig", "PageAllocator", "block_hashes",
+    "SamplingParams", "GREEDY",
 ]

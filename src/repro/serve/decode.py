@@ -24,6 +24,22 @@ retired slot overshooting until the next sync is waste, not corruption —
 the host discards tokens past the request's retirement point and the
 cost accounting (``stats["active_slot_steps"]``) excludes them.
 
+With ``paging=PagedCacheConfig(...)`` the K/V cache becomes a pool of
+fixed-size pages shared by all slots (vLLM-style): each admission rents
+exactly ``ceil((plen + max_new - 1) / page_size)`` pages from a
+host-side free list (``serve.paging.PageAllocator``), retirement
+returns them, and rows with a common prompt prefix share read-only
+prefix pages via refcounted content hashes.  Memory then scales with
+*tokens in flight* instead of ``slots x max_seq``, and a single prompt
+may be longer than an equal-budget contiguous cache would allow.
+Admission is FIFO no-skip: if the head request's pages don't fit, it
+(and everything behind it) waits — no starvation of big requests.
+
+Per-request sampling (``submit(..., sampling=SamplingParams(...))``)
+runs through a second jitted window that draws Gumbel-max samples
+inside the fused scan — still one host sync per K steps.  Greedy
+requests keep the original bitwise-argmax window.
+
 ``RoundTokenServer`` is the previous engine — generation rounds of
 exactly equal prompt length over the shared-scalar-position cache.  It
 is kept as the lockstep baseline: the continuous engine must match it
@@ -42,8 +58,11 @@ import numpy as np
 
 from repro.launch.steps import make_serve_step
 from repro.models import build_model
+from repro.models.paging import prefix_sharing_supported
 from repro.serve.batcher import LATENCY, BatchPolicy
+from repro.serve.paging import PageAllocator, block_hashes
 from repro.serve.request import RequestQueue
+from repro.serve.sampling import SamplingParams
 
 
 @dataclass
@@ -55,9 +74,10 @@ class TokenRequest:
     done: bool = False
     finished_sync: int = -1         # pump index at completion (latency
                                     # accounting; -1 while in flight)
+    sampling: Optional[SamplingParams] = None   # None = greedy
 
 
-def _validate_submit(prompt, max_new, max_seq):
+def _validate_submit(prompt, max_new, max_seq, paging=None):
     prompt = np.asarray(prompt, np.int32)
     if prompt.ndim != 1 or prompt.shape[0] < 1:
         raise ValueError(
@@ -65,7 +85,19 @@ def _validate_submit(prompt, max_new, max_seq):
             f"{prompt.shape}")
     if max_new < 1:
         raise ValueError("max_new must be >= 1")
-    if prompt.shape[0] + max_new - 1 > max_seq:
+    cap = prompt.shape[0] + max_new - 1
+    if paging is not None:
+        # paged capacity: the request needs ceil(cap / page_size) pages
+        # and a block-table row wide enough to hold them — max_seq no
+        # longer bounds the prompt, the page budget does
+        blocks = -(-cap // paging.page_size)
+        if cap > paging.resolved_max_ctx or blocks > paging.n_pages:
+            raise ValueError(
+                f"prompt ({prompt.shape[0]}) + max_new ({max_new}) needs "
+                f"{blocks} pages of {paging.page_size} (ctx {cap}) > page "
+                f"budget (n_pages {paging.n_pages}, max_ctx "
+                f"{paging.resolved_max_ctx})")
+    elif cap > max_seq:
         # a request consumes plen prefill entries + (max_new - 1) decode
         # entries (the last token is emitted without being fed back);
         # past max_seq the cache position wraps its ring buffer silently
@@ -95,15 +127,19 @@ class TokenServer:
     def __init__(self, cfg, params, *, policy: BatchPolicy = LATENCY,
                  max_seq: int = 256, cache_dtype=jnp.bfloat16,
                  sync_every: Optional[int] = None,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None,
+                 paging=None, prefix_cache: bool = True):
         if cfg.family == "lstm_am":
             raise ValueError("TokenServer is the token-LM decode surface; "
                              "acoustic models go through StreamingEngine")
         self.cfg = cfg
-        self.model = build_model(cfg)
+        self.paging = paging
+        self.model = build_model(cfg, paging=paging)
         self.params = params
         self.policy = policy
-        self.max_seq = max_seq
+        # with paging the context bound is the page budget, not max_seq
+        self.max_seq = (paging.resolved_max_ctx if paging is not None
+                        else max_seq)
         self.cache_dtype = cache_dtype
         self.b = policy.max_batch
         self.sync_every = int(sync_every if sync_every is not None
@@ -113,6 +149,7 @@ class TokenServer:
         self.eos_id = eos_id
         self.queue = RequestQueue()
         self.serve = jax.jit(self._make_window())
+        self._serve_sample = None       # jitted lazily on first sampled req
         self._reset = jax.jit(self.model.reset_cache_rows)
         # device state (lazily built on first pump)
         self._cache = None
@@ -122,22 +159,44 @@ class TokenServer:
         # host-side slot mirrors
         self._slots: List[Optional[object]] = [None] * self.b
         self._pos = np.zeros((self.b,), np.int64)       # tokens consumed
-        self._prompts = np.zeros((self.b, max_seq), np.int32)
+        self._prompts = np.zeros((self.b, self.max_seq), np.int32)
         self._plens = np.zeros((self.b,), np.int32)
+        # per-row sampling knobs (greedy defaults; refreshed on admission)
+        self._temp = np.zeros((self.b,), np.float32)
+        self._topk = np.zeros((self.b,), np.int32)
+        self._topp = np.ones((self.b,), np.float32)
+        self._seed = np.zeros((self.b,), np.int32)
+        # paged-mode host state: block table mirror + per-slot page leases
+        if paging is not None:
+            self.alloc = PageAllocator(
+                paging.n_pages, paging.page_size,
+                prefix_cache=prefix_cache and prefix_sharing_supported(cfg))
+            self._tables = np.zeros((self.b, paging.max_blocks), np.int32)
+            self._caps = np.zeros((self.b,), np.int32)
+            self._tables_dirty = False
+            self._blocks: List[Optional[List[int]]] = [None] * self.b
+            self._hashes: List[Optional[List[int]]] = [None] * self.b
+            self._nshared = [0] * self.b
+        else:
+            self.alloc = None
         self.stats = {"steps": 0, "syncs": 0, "slot_steps": 0,
                       "active_slot_steps": 0, "tokens_out": 0,
                       "admitted": 0}
 
     # ------------------------------------------------------- jitted window
 
-    def _make_window(self):
+    def _make_window(self, sample: bool = False):
         """K fused decode steps: each row feeds its own prompt token while
         ``pos < plen`` (ragged prefill) and its last sampled token after;
-        emissions accumulate on device, one host sync per window."""
-        serve_step = make_serve_step(self.model, self.cfg)
+        emissions accumulate on device, one host sync per window.
+
+        ``sample=True`` builds the variant taking per-row sampling knobs
+        (a second jit; the greedy window stays bitwise-identical)."""
+        serve_step = make_serve_step(self.model, self.cfg,
+                                     greedy=not sample)
         k = self.sync_every
 
-        def window(params, cache, tok, prompts, plens):
+        def window(params, cache, tok, prompts, plens, samp=None):
             pmax = prompts.shape[1]
 
             def body(carry, _):
@@ -146,19 +205,29 @@ class TokenServer:
                 ptok = jnp.take_along_axis(
                     prompts, jnp.minimum(pos, pmax - 1)[:, None], axis=1)
                 feed = jnp.where((pos < plens)[:, None], ptok, tok)
-                nxt, _, cache = serve_step(params, cache, feed)
+                if sample:
+                    nxt, _, cache = serve_step(params, cache, feed, samp)
+                else:
+                    nxt, _, cache = serve_step(params, cache, feed)
                 return (cache, nxt), nxt[:, 0]
 
             (cache, tok), emitted = jax.lax.scan(body, (cache, tok), None,
                                                  length=k)
             return cache, tok, emitted                   # emitted (k, B)
-        return window
+        if sample:
+            return window
+
+        def greedy_window(params, cache, tok, prompts, plens):
+            return window(params, cache, tok, prompts, plens)
+        return greedy_window
 
     # ------------------------------------------------------------- submit
 
-    def submit(self, prompt: np.ndarray, max_new: int = 16) -> int:
-        prompt = _validate_submit(prompt, max_new, self.max_seq)
-        req = TokenRequest(-1, prompt, max_new)
+    def submit(self, prompt: np.ndarray, max_new: int = 16,
+               sampling: Optional[SamplingParams] = None) -> int:
+        prompt = _validate_submit(prompt, max_new, self.max_seq,
+                                  paging=self.paging)
+        req = TokenRequest(-1, prompt, max_new, sampling=sampling)
         req.rid = self.queue.submit(req)
         return req.rid
 
@@ -182,22 +251,67 @@ class TokenServer:
             self._tok = jnp.zeros((self.b, 1), jnp.int32)
 
     def _admit(self) -> List[int]:
-        """Fill free slots from the queue head (arrival order)."""
+        """Fill free slots from the queue head (arrival order).
+
+        Paged mode additionally rents every page the request can ever
+        need up front (no mid-flight OOM), reuses published prefix pages
+        when the leading prompt blocks hash-match, and stops admitting
+        at the first request whose pages don't fit (FIFO no-skip — the
+        unfit head and everything behind it are requeued in order)."""
         free = [i for i in range(self.b) if self._slots[i] is None]
         if not free:
             return []
         reqs = self.queue.pop_pending(max_n=len(free))
         admitted = []
-        for slot, req in zip(free, reqs):
+        for n, (slot, req) in enumerate(zip(free, reqs)):
             r = req.payload
+            start = 0
+            if self.paging is not None:
+                start = self._admit_pages(slot, r)
+                if start < 0:               # head doesn't fit: requeue it
+                    self.queue.requeue([q.rid for q in reqs[n:]])
+                    break
             self._slots[slot] = req
-            self._pos[slot] = 0
+            self._pos[slot] = start
             self._prompts[slot] = 0
             self._prompts[slot, :r.prompt.shape[0]] = r.prompt
             self._plens[slot] = r.prompt.shape[0]
+            s = r.sampling or SamplingParams()
+            self._temp[slot] = s.temperature
+            self._topk[slot] = s.top_k
+            self._topp[slot] = s.top_p
+            self._seed[slot] = np.int32(np.uint32(s.seed & 0xFFFFFFFF))
             admitted.append(slot)
         self.stats["admitted"] += len(admitted)
         return admitted
+
+    def _admit_pages(self, slot, r) -> int:
+        """Lease pages for one request.  Returns the row's start
+        position (``cached_len`` — past the shared prefix pages) or -1
+        if the pool can't cover it right now."""
+        ps = self.paging.page_size
+        plen = r.prompt.shape[0]
+        cap = plen + r.max_new - 1
+        total = -(-cap // ps)
+        hashes = block_hashes(r.prompt, ps)
+        n_hit = self.alloc.peek_prefix(hashes)
+        if not self.alloc.can_alloc(total - n_hit):
+            return -1
+        shared = self.alloc.acquire_prefix(hashes[:n_hit])
+        self.alloc.note_miss(len(hashes) - n_hit)
+        blocks = shared + self.alloc.alloc(total - n_hit)
+        self._blocks[slot] = blocks
+        self._hashes[slot] = hashes
+        self._nshared[slot] = n_hit
+        self._tables[slot] = 0
+        self._tables[slot, :len(blocks)] = blocks
+        self._caps[slot] = cap
+        self._tables_dirty = True
+        # the row starts past the cached prefix; its first write lands in
+        # block n_hit, so shared pages are never written.  block_hashes
+        # guarantees n_hit * ps <= plen - 1: at least one prompt token is
+        # always fed, so the row always produces a real first logit.
+        return n_hit * ps
 
     def _abort(self):
         """Failure recovery: a failed window must not strand its slots —
@@ -214,6 +328,17 @@ class TokenServer:
         self._tok = None
         self._prompts_d = None
         self._plens_d = None
+        if self.paging is not None:
+            # device pools were just dropped, so every cached page's
+            # contents are gone too — full allocator reset, not release
+            # (a released published page would advertise stale contents)
+            self.alloc.reset()
+            self._tables[:] = 0
+            self._caps[:] = 0
+            self._tables_dirty = False
+            self._blocks = [None] * self.b
+            self._hashes = [None] * self.b
+            self._nshared = [0] * self.b
         self.queue.restore_in_flight()
 
     def pump(self) -> Dict[int, TokenRequest]:
@@ -228,19 +353,49 @@ class TokenServer:
                 return {rid: cr.result
                         for rid, cr in self.queue.pop_completed().items()}
             self._ensure_device_state()
+            if self.paging is not None and self._tables_dirty:
+                # block-table changes (admission leases, retirement
+                # returns) reach the device as a fresh pages dict; rows
+                # whose table row is all-zero point at the trash page
+                self._cache = dict(self._cache)
+                self._cache["pages"] = {
+                    "tables": jnp.asarray(self._tables),
+                    "caps": jnp.asarray(self._caps)}
+                self._tables_dirty = False
             if admitted:
                 mask = np.zeros((self.b,), bool)
                 mask[admitted] = True
-                self._cache = self._reset(self._cache, jnp.asarray(mask))
+                if self.paging is not None:
+                    # prefix-cache hits start past the shared pages
+                    self._cache = self._reset(
+                        self._cache, jnp.asarray(mask),
+                        jnp.asarray(self._pos.astype(np.int32)))
+                else:
+                    self._cache = self._reset(self._cache,
+                                              jnp.asarray(mask))
                 # prompts/plens only change on admission: refresh the
                 # device copies here, not once per window (a retired
                 # slot's stale device plen is harmless — the row is
                 # garbage until its next admission re-uploads)
                 self._prompts_d = jnp.asarray(self._prompts)
                 self._plens_d = jnp.asarray(self._plens)
-            cache, tok, emitted = self.serve(
-                self.params, self._cache, self._tok,
-                self._prompts_d, self._plens_d)
+            if any(req is not None and req.payload.sampling is not None
+                   and not req.payload.sampling.greedy
+                   for req in self._slots):
+                if self._serve_sample is None:
+                    self._serve_sample = jax.jit(
+                        self._make_window(sample=True))
+                samp = {"temperature": jnp.asarray(self._temp),
+                        "top_k": jnp.asarray(self._topk),
+                        "top_p": jnp.asarray(self._topp),
+                        "seed": jnp.asarray(self._seed)}
+                cache, tok, emitted = self._serve_sample(
+                    self.params, self._cache, self._tok,
+                    self._prompts_d, self._plens_d, samp)
+            else:
+                cache, tok, emitted = self.serve(
+                    self.params, self._cache, self._tok,
+                    self._prompts_d, self._plens_d)
             emitted = np.asarray(emitted)    # THE host sync of this window
         except BaseException:
             # admission, row reset and the window itself all recover the
@@ -252,10 +407,12 @@ class TokenServer:
         self.stats["steps"] += k
         self.stats["slot_steps"] += k * self.b
         for i, req in enumerate(self._slots):
+            if req is None:
+                continue        # empty slots don't advance: their host
+                                # position must keep matching the device
+                                # row (reset on admission), not drift
             p0 = int(self._pos[i])
             self._pos[i] += k
-            if req is None:
-                continue
             r = req.payload
             plen = int(self._plens[i])
             live = 0
@@ -277,9 +434,45 @@ class TokenServer:
                 r.finished_sync = self.stats["syncs"]
                 self._slots[i] = None
                 self._plens[i] = 0
+                self._temp[i] = 0.0      # stale rows back to cheap argmax
+                if self.paging is not None:
+                    self._release_slot(i)
                 self.queue.complete(r.rid, r)
         return {rid: cr.result
                 for rid, cr in self.queue.pop_completed().items()}
+
+    def _release_slot(self, i):
+        """Return a retired slot's pages.  Freshly written prompt blocks
+        are published first so later requests with the same prefix can
+        share them; the trash-page table row makes the retired row's
+        overshoot writes land harmlessly in page 0."""
+        blocks, hashes = self._blocks[i], self._hashes[i]
+        for j in range(self._nshared[i], len(hashes)):
+            self.alloc.publish(blocks[j], hashes[j])
+        self.alloc.release(blocks)
+        self._blocks[i] = None
+        self._hashes[i] = None
+        self._nshared[i] = 0
+        self._tables[i] = 0
+        self._caps[i] = 0
+        self._tables_dirty = True
+
+    def slot_positions(self):
+        """(host, device) consumed-token positions for debugging and the
+        slot-invariant test; device is None before the first pump."""
+        host = self._pos.copy()
+        dev = (np.asarray(self._cache["pos"]) if self._cache is not None
+               else None)
+        return host, dev
+
+    def paging_stats(self):
+        """Allocator counters + current occupancy (paged mode only)."""
+        if self.alloc is None:
+            return None
+        s = dict(self.alloc.stats)
+        s["free"] = self.alloc.free_pages()
+        s["live"] = self.alloc.live_pages()
+        return s
 
     @property
     def n_active(self) -> int:
@@ -309,7 +502,8 @@ class RoundTokenServer:
     continuous ``TokenServer`` removes all three costs."""
 
     def __init__(self, cfg, params, *, policy: BatchPolicy = LATENCY,
-                 max_seq: int = 256, cache_dtype=jnp.bfloat16):
+                 max_seq: int = 256, cache_dtype=jnp.bfloat16,
+                 eos_id: Optional[int] = None):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params
@@ -317,6 +511,7 @@ class RoundTokenServer:
         self.max_seq = max_seq
         self.cache_dtype = cache_dtype
         self.b = policy.max_batch
+        self.eos_id = eos_id
         self.serve = jax.jit(make_serve_step(self.model, cfg))
         self.queue = RequestQueue()
 
@@ -361,8 +556,10 @@ class RoundTokenServer:
             host_tok = np.asarray(tokens)   # one device->host sync per step
             for i, r in enumerate(round_):
                 if not r.done:
-                    r.out.append(int(host_tok[i, 0]))
-                    if len(r.out) >= r.max_new:
+                    t = int(host_tok[i, 0])
+                    r.out.append(t)
+                    if (self.eos_id is not None and t == self.eos_id) \
+                            or len(r.out) >= r.max_new:
                         r.done = True
             if all(r.done for r in round_):
                 break

@@ -47,13 +47,18 @@ from repro.serve.batcher import (LATENCY, THROUGHPUT, BatchPolicy,
 from repro.serve.request import CompletedRequest, RequestQueue
 
 
-def make_topk_emitter(k: int, impl: str = "lax", *, interpret: bool = True):
+def make_topk_emitter(k: int, impl: str = "lax", *,
+                      interpret: Optional[bool] = None):
     """logits (..., V) -> (vals (..., k) bf16 shifted, idx (..., k) i32).
 
     impl="kernel" routes selection through the Pallas tile kernel
     (``kernels/topk_logits``); "lax" uses the logit-store codec.  Both
     produce the LogitStore wire format (max logit shifted to 0, bf16).
+    ``interpret=None`` auto-detects like ``kernels/gtc_compress``:
+    compiled on TPU, Pallas interpreter everywhere else.
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     if impl == "kernel":
         def emit(logits):
             vals, idx = topk_logits(logits, k, interpret=interpret)
@@ -103,7 +108,8 @@ class StreamingEngine:
 
     def __init__(self, cfg, params, *, k: int = 20, temperature: float = 1.0,
                  policy: BatchPolicy = THROUGHPUT, n_slots: int = 4,
-                 topk_impl: str = "lax", interpret: bool = True):
+                 topk_impl: str = "lax",
+                 interpret: Optional[bool] = None):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params

@@ -1,0 +1,83 @@
+"""Per-request sampling for the continuous-batching decode window.
+
+``sample_tokens`` is traced inside the fused ``sync_every``-step
+``lax.scan`` window, so everything is vectorised over rows and there is
+no host traffic: temperature, top-k, top-p and seed arrive as (B,)
+arrays chosen per-request at admission.
+
+Reproducibility contract: the Gumbel noise for row b at position p is a
+pure function of ``(seed_b, p)`` — ``fold_in(PRNGKey(seed_b), p)`` —
+never of the batch composition or wall clock.  The same request replayed
+solo, in a different slot, or next to different neighbours samples the
+same tokens.  ``temperature <= 0`` is the greedy sentinel: that row
+takes argmax bitwise, so mixing greedy and sampled requests in one
+window is safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request knobs. Defaults are greedy (temperature 0)."""
+    temperature: float = 0.0
+    top_k: int = 0          # 0 = no top-k cut
+    top_p: float = 1.0      # 1.0 = no nucleus cut
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.top_k < 0:
+            raise ValueError("top_k must be >= 0 (0 disables)")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError("top_p must be in (0, 1]")
+
+    @property
+    def greedy(self):
+        return self.temperature <= 0.0
+
+
+GREEDY = SamplingParams()
+
+
+def sample_tokens(logits, temperature, top_k, top_p, seeds, pos):
+    """Sample one token per row.  logits (B, V) float; temperature /
+    top_p (B,) float; top_k / seeds / pos (B,) int.  Returns (B,) int32.
+
+    One descending sort per step covers both filters: top-k keeps ranks
+    < k, top-p keeps the shortest prefix whose mass reaches top_p (the
+    ``cum - probs < top_p`` form always keeps rank 0, so a peaked
+    distribution can never mask everything).  Selection is Gumbel-max
+    over the surviving ranks, mapped back through the sort order.
+    """
+    b, v = logits.shape
+    logits = logits.astype(jnp.float32)
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    safe_t = jnp.where(temperature > 0, temperature, 1.0).astype(jnp.float32)
+    scaled = logits / safe_t[:, None]
+    order = jnp.argsort(-scaled, axis=-1)                  # (B, V) desc
+    svals = jnp.take_along_axis(scaled, order, axis=-1)
+    probs = jax.nn.softmax(svals, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+
+    k_eff = jnp.where(top_k > 0, top_k, v)
+    keep = jnp.arange(v)[None, :] < k_eff[:, None]
+    keep &= (cum - probs) < top_p[:, None]
+    keep = keep.at[:, 0].set(True)
+    masked = jnp.where(keep, svals, NEG_INF)
+
+    def row_gumbel(seed, p):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), p)
+        return jax.random.gumbel(key, (v,), jnp.float32)
+
+    g = jax.vmap(row_gumbel)(seeds, pos)
+    pick = jnp.argmax(masked + g, axis=-1)
+    sampled = jnp.take_along_axis(order, pick[:, None], axis=-1)[:, 0]
+    return jnp.where(temperature > 0, sampled,
+                     greedy_tok).astype(jnp.int32)

@@ -112,6 +112,48 @@ def test_per_row_cache_matches_scalar(arch):
     np.testing.assert_array_equal(np.asarray(c_r["pos"]), [8, 8])
 
 
+@pytest.mark.parametrize("arch", [
+    "qwen2.5-3b",                           # rope + GQA, plain pool pages
+    pytest.param("gemma3-27b", marks=pytest.mark.slow),        # swa ring
+    pytest.param("deepseek-v3-671b", marks=pytest.mark.slow),  # mla latent
+    pytest.param("whisper-medium", marks=pytest.mark.slow)])  # enc-dec
+def test_paged_cache_matches_contiguous(arch):
+    """The block-table pool layout decodes like the contiguous per-row
+    cache: identical cache contents at every written slot and the same
+    greedy argmax at every step (logits match to fp-reassociation
+    tolerance — the gather-based contraction may fuse differently)."""
+    from repro.models.paging import PagedCacheConfig
+    cfg = reduced(get_arch(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(1))
+    paging = PagedCacheConfig(page_size=4, n_pages=8, max_ctx=16)
+    paged = build_model(cfg, paging=paging)
+    rng = np.random.default_rng(5)
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, (2, 8)), jnp.int32)
+    c_r = model.init_cache(2, 16, jnp.float32, per_row=True)
+    c_p = paged.init_cache(2, 16, jnp.float32, per_row=True)
+    if cfg.encoder is not None:
+        feats = jnp.asarray(rng.standard_normal((2, 16, cfg.d_model)),
+                            jnp.float32)
+        c_r = model.prefill_cache(params, feats, c_r)
+        c_p = paged.prefill_cache(params, feats, c_p)
+    # hand each row a disjoint page run (what the serve-side allocator
+    # does); page 0 stays the trash page
+    c_p["pages"]["tables"] = jnp.asarray([[1, 2, 3, 4], [5, 6, 7, 8]],
+                                         jnp.int32)
+    c_p["pages"]["caps"] = jnp.asarray([16, 16], jnp.int32)
+    step_r = jax.jit(model.decode_step)
+    step_p = jax.jit(paged.decode_step)
+    for t in range(8):
+        lg_r, c_r = step_r(params, c_r, toks[:, t:t + 1])
+        lg_p, c_p = step_p(params, c_p, toks[:, t:t + 1])
+        np.testing.assert_allclose(np.asarray(lg_p), np.asarray(lg_r),
+                                   rtol=1e-3, atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(lg_p).argmax(-1),
+                                      np.asarray(lg_r).argmax(-1))
+    np.testing.assert_array_equal(np.asarray(c_p["pos"]), [8, 8])
+
+
 def test_per_row_ragged_reset_matches_solo():
     """Rows at *different* positions in one batch: row 1 is admitted
     mid-decode via reset_cache_rows and fed its own stream — each row's

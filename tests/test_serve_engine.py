@@ -756,3 +756,41 @@ def test_continuous_eos_retirement():
     done = srv.drain()
     assert done[rid].out == [eos]
     assert srv.n_active == 0
+
+
+def test_rounds_eos_matches_continuous():
+    """RoundTokenServer honors eos_id (regression: it used to silently
+    accept none) and stays token-for-token lockstep with the continuous
+    engine on an equal-length EOS workload."""
+    from repro.serve import RoundTokenServer, TokenServer
+    cfg, params = _lm()
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(1, cfg.vocab_size, 6) for _ in range(3)]
+    # pick an EOS each greedy run will actually emit mid-generation
+    eos = _solo_decode(cfg, params, prompts[0], 8)[2]
+    cont = TokenServer(cfg, params, max_seq=64, eos_id=eos)
+    rounds = RoundTokenServer(cfg, params, max_seq=64, eos_id=eos)
+    rc = [cont.submit(p, max_new=8) for p in prompts]
+    rr = [rounds.submit(p, max_new=8) for p in prompts]
+    out_c, out_r = cont.drain(), rounds.drain()
+    for a, b in zip(rc, rr):
+        assert out_c[a].out == out_r[b].out
+        assert len(out_r[b].out) <= 8
+        if eos in out_r[b].out:
+            assert out_r[b].out[-1] == eos       # stops at, and
+            assert out_r[b].out.count(eos) == 1  # includes, the EOS
+
+
+def test_topk_emitter_auto_interpret():
+    """interpret=None auto-detects the backend (regression: the kernel
+    emitter used to hardcode interpret=True even on TPU); on CPU it must
+    resolve to the interpreter and still match the lax path."""
+    rng = np.random.default_rng(9)
+    logits = jnp.asarray(rng.normal(size=(2, 10, 60)), jnp.float32) * 3
+    auto = make_topk_emitter(5, "kernel")        # no interpret given
+    ref = make_topk_emitter(5, "lax")
+    v1, i1 = auto(logits)
+    v2, i2 = ref(logits)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(v1, np.float32),
+                               np.asarray(v2, np.float32), atol=1e-2)
