@@ -12,7 +12,19 @@ gains".
 Both runs are the *same* Trainer.fit() loop over the same data source;
 only the DistributedStrategy constructor argument differs — the point
 of the unified Trainer API.
+
+Topology flags (repro.runtime):
+  REPRO_HOST_DEVICES=8 python examples/distributed_trainers.py
+      — run the shard_map trainers on a real 8-device host mesh
+  python examples/distributed_trainers.py --cluster host:port,N,i
+      — multi-host launch via jax.distributed (single-process specs
+        are a no-op)
 """
+from repro.runtime.env import bootstrap_from_env
+bootstrap_from_env()    # before the first jax import (locks XLA flags)
+
+import argparse
+
 import jax
 
 from repro.core.ssl_pipeline import PipelineConfig, SSLPipeline
@@ -20,6 +32,7 @@ from repro.distributed.bmuf import BMUFConfig
 from repro.distributed.gtc import GTCConfig
 from repro.launch.steps import make_loss_fn
 from repro.models import build_model
+from repro.runtime.cluster import ClusterConfig, initialize, worker_mesh
 from repro.train import (GTC, BMUFVmap, GTCShardMap, ListSink, Trainer,
                          epoch_source)
 
@@ -37,6 +50,14 @@ def run(strategy, label, *, model, cfg, batches, epochs=3, lr=5e-2):
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cluster", default="",
+                    help="'env' or 'host:port,N,i' (see runtime.cluster)")
+    args = ap.parse_args()
+    if args.cluster:
+        info = initialize(ClusterConfig.from_spec(args.cluster))
+        print(f"cluster: process {info.process_index}/{info.process_count}")
+
     pc = PipelineConfig(n_labeled=32, n_val=8, epochs_baseline=1)
     pipe = SSLPipeline(pc, out_dir="experiments/trainers")
     cfg = pipe.student_cfg
@@ -51,8 +72,9 @@ def main():
     print(f"  wire density {dens:.3f} "
           f"(bandwidth saving ~{1 / max(dens, 1e-3):.0f}x)")
 
-    print("\n== GTCShardMap (2 workers, int8 wire over the mesh) ==")
-    mesh = jax.make_mesh((1,), ("data",))
+    mesh = worker_mesh(2)     # widest device mesh 2 workers divide onto
+    print(f"\n== GTCShardMap (2 workers, int8 wire over a "
+          f"{mesh.devices.size}-device mesh) ==")
     run(GTCShardMap(GTCConfig(tau=5e-4, n_workers=2), mesh),
         "gtc_shardmap", model=model, cfg=cfg, batches=batches)
 

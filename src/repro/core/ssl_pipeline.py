@@ -53,11 +53,51 @@ from repro.distributed.bmuf import BMUFConfig
 from repro.distributed.gtc import GTCConfig
 from repro.launch.steps import make_loss_fn
 from repro.models import build_model
+from repro.runtime.cluster import worker_mesh
 from repro.seqtrain import build_denominator_graph, make_smbr_loss_fn
 from repro.seqtrain.smbr import frame_error_rate
 from repro.train import (GTC, BMUFVmap, GTCShardMap, ListSink, Local,
                          TrainBatch, Trainer, chain, distill_shard_source,
                          epoch_source, scheduled_source)
+
+
+def am_configs(*, n_layers: int, lstm_hidden: int, n_senones: int,
+               feat_dim: int):
+    """(student, teacher) ModelConfigs from the pipeline's scale knobs.
+
+    Module-level (not a method) because the multi-process generation
+    workers rebuild the teacher config from these same scalars on the
+    far side of a process boundary (:func:`pipeline_teacher_engine`).
+    """
+    base = AM_CONFIG.replace(
+        segments=(Segment((LayerSpec(mixer="lstm", ffn="none"),),
+                          repeat=n_layers),),
+        lstm_hidden=lstm_hidden, n_senones=n_senones,
+        vocab_size=n_senones, feat_dim=feat_dim)
+    teacher = base.replace(
+        name="teacher",
+        segments=(Segment((LayerSpec(mixer="bilstm", ffn="none"),),
+                          repeat=n_layers),))
+    return base, teacher
+
+
+def pipeline_teacher_engine(worker_id: int, kwargs: dict):
+    """Engine factory spec ``repro.core.ssl_pipeline:
+    pipeline_teacher_engine`` — a generation worker process rebuilds
+    the pipeline's TeacherRunner from the teacher checkpoint on disk
+    (kwargs: ckpt_dir + the :func:`am_configs` scalars + topk)."""
+    del worker_id
+    _, teacher_cfg = am_configs(
+        n_layers=int(kwargs["n_layers"]),
+        lstm_hidden=int(kwargs["lstm_hidden"]),
+        n_senones=int(kwargs["n_senones"]),
+        feat_dim=int(kwargs["feat_dim"]))
+    model = build_model(teacher_cfg)
+    like = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    like = jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), like)
+    params, _ = CheckpointStore(kwargs["ckpt_dir"]).load(like)
+    return TeacherRunner(teacher_cfg, params, k=int(kwargs["topk"]))
 
 
 def _pad_time(batch: dict, t: int) -> dict:
@@ -97,6 +137,10 @@ class PipelineConfig:
     # data plane
     gen_workers: int = 2              # target-generation workers (ledgered
                                       # disjoint shard ranges, engine each)
+    gen_procs: int = 0                # >0: generation as N real OS
+                                      # processes racing the shared ledger
+                                      # (runtime.workers; manifest bitwise-
+                                      # identical to in-process)
     prefetch: int = 2                 # async feed depth for Trainer.fit
                                       # (0 = synchronous)
     # schedule (paper-structured, scaled)
@@ -152,16 +196,9 @@ class SSLPipeline:
                                    lookahead=0)
         self.loader.estimate_mvn(min(24, pc.n_labeled))
 
-        base = AM_CONFIG.replace(
-            segments=(Segment((LayerSpec(mixer="lstm", ffn="none"),),
-                              repeat=pc.n_layers),),
-            lstm_hidden=pc.lstm_hidden, n_senones=pc.n_senones,
-            vocab_size=pc.n_senones, feat_dim=pc.feat_dim)
-        self.student_cfg = base
-        self.teacher_cfg = base.replace(
-            name="teacher",
-            segments=(Segment((LayerSpec(mixer="bilstm", ffn="none"),),
-                              repeat=pc.n_layers),))
+        self.student_cfg, self.teacher_cfg = am_configs(
+            n_layers=pc.n_layers, lstm_hidden=pc.lstm_hidden,
+            n_senones=pc.n_senones, feat_dim=pc.feat_dim)
 
         # utterance-id ranges: labeled / unlabeled / val are disjoint
         self.rng_labeled = (0, pc.n_labeled)
@@ -316,20 +353,39 @@ class SSLPipeline:
                    for b in self._batches(self.rng_unlabeled, chunked=True,
                                           seed=7)]
 
-        def make_engine(worker: int):
-            return TeacherRunner(self.teacher_cfg, tparams, k=pc.topk)
+        if pc.gen_procs >= 1:
+            # real OS processes: each rebuilds the teacher from the
+            # checkpoint (the factory spec crosses the process boundary;
+            # params cannot) — manifest bitwise-identical to in-process
+            make_engine = ("repro.core.ssl_pipeline:"
+                           "pipeline_teacher_engine")
+            engine_kwargs = {
+                "ckpt_dir": os.path.join(self.out, "ckpt_teacher"),
+                "n_layers": pc.n_layers, "lstm_hidden": pc.lstm_hidden,
+                "n_senones": pc.n_senones, "feat_dim": pc.feat_dim,
+                "topk": pc.topk}
+        else:
+            engine_kwargs = None
+
+            def make_engine(worker: int):
+                return TeacherRunner(self.teacher_cfg, tparams, k=pc.topk)
 
         report = generate_sharded(
             make_engine, batches, store, n_workers=pc.gen_workers,
-            ledger_path=os.path.join(self.out, "gen_ledger.json"))
+            ledger_path=os.path.join(self.out, "gen_ledger.json"),
+            processes=pc.gen_procs, engine_kwargs=engine_kwargs)
         store.verify()                    # manifest-checksum every shard
         meta = store.stats()
         full = meta.n_frames * pc.n_senones * 4
         packed = meta.n_frames * (pc.topk * 6)
-        return {"n_shards": report["n_shards"], "n_frames": meta.n_frames,
-                "n_workers": report["n_workers"], "wave": report["wave"],
-                "resumed": report["resumed"],
-                "storage_compression_x": round(full / packed, 1)}
+        out = {"n_shards": report["n_shards"], "n_frames": meta.n_frames,
+               "n_workers": report["n_workers"], "wave": report["wave"],
+               "resumed": report["resumed"],
+               "storage_compression_x": round(full / packed, 1)}
+        if pc.gen_procs >= 1:             # the fleet's completion report
+            out.update({k: report[k] for k in ("processes", "restarts",
+                                               "reclaimed")})
+        return out
 
     def _student_strategy(self):
         pc = self.pc
@@ -410,10 +466,7 @@ class SSLPipeline:
         # widest mesh the worker count divides onto: each device carries
         # workers/n_dev unrolled workers (all of them on 1 device at
         # laptop scale; one each on the paper's 16-GPU shape)
-        n_dev = max(d for d in range(1, min(pc.gtc_workers,
-                                            jax.device_count()) + 1)
-                    if pc.gtc_workers % d == 0)
-        mesh = jax.make_mesh((n_dev,), ("data",))
+        mesh = worker_mesh(pc.gtc_workers)
         return GTCShardMap(
             GTCConfig(tau=pc.gtc_tau, n_workers=pc.gtc_workers),
             mesh, clip=0.0)

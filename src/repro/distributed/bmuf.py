@@ -145,8 +145,9 @@ def make_sharded_bmuf_block_step(train_step: Callable, cfg: BMUFConfig,
     is handled by the step's own pjit partitioning (params enter with their
     usual 2D specs plus the leading worker dim).
     """
-    from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.utils.compat import shard_map
 
     ax = worker_axes if len(worker_axes) > 1 else worker_axes[0]
 

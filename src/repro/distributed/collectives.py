@@ -10,8 +10,9 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.utils.compat import shard_map
 
 tmap = jax.tree_util.tree_map
 

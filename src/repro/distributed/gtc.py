@@ -252,9 +252,9 @@ def make_sharded_gtc_train_step(loss_fn: Callable,
     step(params, opt_state, gtc_state, batches, lr, rng=None) with lr
     traced — one compile per loss kind.
     """
-    from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
+    from repro.utils.compat import shard_map
     from repro.utils.introspect import takes_rng as _takes
 
     ax = worker_axes if len(worker_axes) > 1 else worker_axes[0]

@@ -1,7 +1,10 @@
 import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=512")
-# ^ MUST precede every other import (jax locks device count on first init).
+
+from repro.runtime.env import bootstrap
+bootstrap(host_device_count=512)
+# ^ MUST precede the first jax import (jax locks device count on first
+# init); runtime.env composes the flag idempotently with any existing
+# XLA_FLAGS instead of blindly appending a duplicate.
 
 """Multi-pod dry-run: prove the distribution config is coherent.
 

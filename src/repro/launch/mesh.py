@@ -1,13 +1,19 @@
 """Production mesh builders.
 
-Functions, not module-level constants: importing this module never touches
-jax device state.  The dry-run launcher sets
-``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before importing
-anything, then calls these.
+Functions, not module-level constants: importing this module never
+touches jax device state.  Device *count* is the runtime layer's job —
+entry points call ``repro.runtime.env.bootstrap`` (host-platform
+device-count override, e.g. 512 for the dry-run) before their first
+jax import, then build meshes here over whatever that produced.
+Worker-axis meshes for the GTC/BMUF strategies live in
+``repro.runtime.cluster.worker_mesh`` (re-exported here): the widest
+1D mesh the worker count divides onto.
 """
 from __future__ import annotations
 
 import jax
+
+from repro.runtime.cluster import worker_mesh  # noqa: F401  (re-export)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

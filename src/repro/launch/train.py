@@ -19,6 +19,11 @@ path; the full-size path is the dry-run (launch/dryrun.py).
 """
 from __future__ import annotations
 
+from repro.runtime.env import bootstrap_from_env
+bootstrap_from_env()
+# ^ REPRO_HOST_DEVICES / REPRO_PLATFORM / ... must land in os.environ
+# before the first jax import locks the XLA client config.
+
 import argparse
 import json
 import os
@@ -72,8 +77,24 @@ def main(argv=None):
     ap.add_argument("--prefetch", type=int, default=None,
                     help="async feed depth for Trainer.fit "
                          "(0 = synchronous; default: PipelineConfig's 2)")
+    ap.add_argument("--gen-procs", type=int, default=0,
+                    help="target generation as N real OS processes "
+                         "racing the shared ledger (0 = in-process; "
+                         "the manifest is bitwise-identical either way)")
+    ap.add_argument("--cluster", default="",
+                    help="multi-host launch: 'env' (JAX_COORDINATOR_"
+                         "ADDRESS/JAX_NUM_PROCESSES/JAX_PROCESS_ID or "
+                         "REPRO_* equivalents) or 'host:port,N,i'; "
+                         "single-process specs are a no-op")
     ap.add_argument("--out", default="experiments/train")
     args = ap.parse_args(argv)
+
+    if args.cluster:
+        from repro.runtime.cluster import ClusterConfig, initialize
+        info = initialize(ClusterConfig.from_spec(args.cluster))
+        print(f"[train] cluster: process {info.process_index}/"
+              f"{info.process_count}"
+              f"{' (coordinator)' if info.is_coordinator else ''}")
 
     if args.arch != "lstm-am-7khr" or args.smoke:
         print(f"[train] LLM smoke: {args.arch}")
@@ -90,6 +111,8 @@ def main(argv=None):
         scale.gtc_workers = args.gtc_workers
     if args.prefetch is not None:
         scale.prefetch = args.prefetch
+    if args.gen_procs:
+        scale.gen_procs = args.gen_procs
     pipe = SSLPipeline(scale, out_dir=args.out,
                        student_trainer=args.trainer)
     t0 = time.time()

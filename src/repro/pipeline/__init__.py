@@ -11,11 +11,22 @@ a thread, ``jax.device_put`` staged, order-preserving).
 """
 from repro.pipeline.generate import (WorkLedger, WorkRange,
                                      generate_corpus, generate_sharded,
-                                     shard_ranges)
-from repro.pipeline.prefetch import PrefetchingSource
+                                     prepare_ledger, shard_ranges)
 
 __all__ = [
-    "WorkLedger", "WorkRange", "shard_ranges",
+    "WorkLedger", "WorkRange", "shard_ranges", "prepare_ledger",
     "generate_sharded", "generate_corpus",
     "PrefetchingSource",
 ]
+
+
+def __getattr__(name):
+    # lazy: PrefetchingSource stages batches with jax.device_put, but
+    # the generation half of this package is numpy-only — and the
+    # multi-process workers (repro.runtime.workers) import it on a
+    # spawn-time budget, so the jax pull must wait for a consumer that
+    # actually prefetches
+    if name == "PrefetchingSource":
+        from repro.pipeline.prefetch import PrefetchingSource
+        return PrefetchingSource
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

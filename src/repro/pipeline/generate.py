@@ -18,18 +18,27 @@ idempotently.
 
 At laptop scale the "workers" run round-robin inside one process; the
 claim/ledger protocol is identical to what N real processes against a
-shared filesystem would execute.  ``TeacherRunner.generate_to_store``
-and ``generate_corpus_to_store`` (repro.core.teacher) are thin
-single-worker special cases of the helpers here.
+shared filesystem would execute — and ``generate_sharded(processes=N)``
+actually executes it that way, spawning N OS processes through
+``repro.runtime.workers`` that race ``claim_shared`` (an
+``fcntl``-locked read-modify-write) on the same ledger file, with
+heartbeat files and stale-claim stealing for hung or killed workers.
+``TeacherRunner.generate_to_store`` and ``generate_corpus_to_store``
+(repro.core.teacher) are thin single-worker special cases of the
+helpers here.
 """
 from __future__ import annotations
 
+import importlib
 import json
 import os
+import time
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
+
+from repro.runtime.procs import file_lock, heartbeat_age
 
 
 def shard_ranges(n_items: int, n_workers: int) -> List[Tuple[int, int]]:
@@ -53,6 +62,7 @@ class WorkRange:
     hi: int
     status: str = "pending"          # pending | claimed | done
     owner: Optional[str] = None
+    claim_ts: Optional[float] = None  # wall time of the claim (shared mode)
 
 
 class WorkLedger:
@@ -62,6 +72,20 @@ class WorkLedger:
     "pending" — any claim in a freshly-loaded ledger belongs to a dead
     worker by definition (live claims exist only in the process that
     made them).  "done" survives reopen: that is the resume contract.
+
+    **Shared (multi-process) mode**: N processes race the same ledger
+    file through ``claim_shared`` / ``mark_done_shared`` — each is an
+    ``fcntl``-locked reload-modify-save, so claims serialize across
+    processes on a shared filesystem.  Workers join via :meth:`attach`
+    (NO reopen-time demotion — other processes' claims are live, not
+    stale); liveness is instead tracked by heartbeat files
+    (``repro.runtime.procs``) and :meth:`reclaim_stale` steals claims
+    whose owner's heartbeat has gone quiet — covering *hung* workers,
+    which never reopen anything, as well as dead ones.  Stealing is
+    safe because shard contents are deterministic and commits
+    idempotent: if a presumed-dead worker wakes up and finishes, it
+    rewrites byte-identical shards and its ``mark_done_shared`` is a
+    no-op on an already-done range.
     """
 
     def __init__(self, path: str, ranges: List[WorkRange], *, wave: int = 0):
@@ -94,6 +118,20 @@ class WorkLedger:
         return led
 
     @classmethod
+    def attach(cls, path: str) -> "WorkLedger":
+        """Join an existing ledger as one of several live processes:
+        load as-is — no demotion (other workers' claims are live), no
+        partition check (the supervisor already wrote the partition),
+        no save (attaching must not race a writer)."""
+        with open(path) as f:
+            d = json.load(f)
+        return cls(path,
+                   [WorkRange(r["lo"], r["hi"], r["status"],
+                              r.get("owner"), r.get("claim_ts"))
+                    for r in d["ranges"]],
+                   wave=int(d.get("wave", 0)))
+
+    @classmethod
     def fresh(cls, path: str, ranges: Sequence[Tuple[int, int]], *,
               wave: int = 0) -> "WorkLedger":
         """Start over (new generation wave): forget any previous ledger."""
@@ -104,7 +142,8 @@ class WorkLedger:
     def _save(self):
         payload = {"wave": self.wave,
                    "ranges": [{"lo": r.lo, "hi": r.hi, "status": r.status,
-                               "owner": r.owner} for r in self.ranges]}
+                               "owner": r.owner, "claim_ts": r.claim_ts}
+                              for r in self.ranges]}
         tmp = self.path + ".tmp"
         os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
         with open(tmp, "w") as f:
@@ -144,6 +183,95 @@ class WorkLedger:
         rng.status, rng.owner = "done", None
         self._save()
 
+    # --------------------------------------- shared (multi-process) mode
+
+    @property
+    def lock_path(self) -> str:
+        return self.path + ".lock"
+
+    @property
+    def heartbeat_dir(self) -> str:
+        return os.path.join(os.path.dirname(self.path) or ".",
+                            "heartbeats")
+
+    def _reload(self):
+        """Adopt the on-disk state (caller holds the lock)."""
+        with open(self.path) as f:
+            d = json.load(f)
+        self.ranges = [WorkRange(r["lo"], r["hi"], r["status"],
+                                 r.get("owner"), r.get("claim_ts"))
+                       for r in d["ranges"]]
+        self.wave = int(d.get("wave", self.wave))
+
+    def claim_shared(self, owner: str) -> Optional[WorkRange]:
+        """Multi-process claim: locked reload -> first pending ->
+        claimed(owner, now) -> save.  Two processes racing this see
+        serialized ledgers and can never claim the same range."""
+        with file_lock(self.lock_path):
+            self._reload()
+            for r in self.ranges:
+                if r.status == "pending":
+                    r.status, r.owner = "claimed", owner
+                    r.claim_ts = time.time()
+                    self._save()
+                    return r
+        return None
+
+    def mark_done_shared(self, rng: WorkRange):
+        """Locked done-transition, matched by (lo, hi) against the
+        reloaded state.  Idempotent: an already-done range (a stolen
+        claim the original owner also finished) stays done."""
+        with file_lock(self.lock_path):
+            self._reload()
+            for r in self.ranges:
+                if (r.lo, r.hi) == (rng.lo, rng.hi):
+                    r.status, r.owner, r.claim_ts = "done", None, None
+                    self._save()
+                    return
+        raise ValueError(f"range ({rng.lo}, {rng.hi}) not in ledger")
+
+    def reclaim_stale(self, *, max_age_s: float,
+                      owners: Optional[Sequence[str]] = None,
+                      now: Optional[float] = None) -> List[WorkRange]:
+        """Steal claims from quiet owners (the heartbeat-age contract).
+
+        A claimed range demotes back to pending when its owner's
+        heartbeat file is older than ``max_age_s`` — or was never
+        written, with the claim itself older than ``max_age_s`` (died
+        before the first beat).  ``owners`` narrows the sweep to known
+        casualties (the supervisor passes a dead child's owner id for
+        immediate reclaim without waiting out the heartbeat timeout).
+        Returns the ranges stolen.
+        """
+        now = time.time() if now is None else now
+        stolen: List[WorkRange] = []
+        with file_lock(self.lock_path):
+            self._reload()
+            for r in self.ranges:
+                if r.status != "claimed" or r.owner is None:
+                    continue
+                if owners is not None:
+                    if r.owner not in owners:
+                        continue
+                else:
+                    age = heartbeat_age(self.heartbeat_dir, r.owner,
+                                        now=now)
+                    if age is None:         # never beat: age the claim
+                        age = now - (r.claim_ts or 0.0)
+                    if age <= max_age_s:
+                        continue
+                stolen.append(WorkRange(r.lo, r.hi, "claimed", r.owner,
+                                        r.claim_ts))
+                r.status, r.owner, r.claim_ts = "pending", None, None
+            if stolen:
+                self._save()
+        return stolen
+
+    def refresh(self):
+        """Re-read the on-disk state (locked) — the supervisor's view."""
+        with file_lock(self.lock_path):
+            self._reload()
+
     # ------------------------------------------------------------ queries
 
     @property
@@ -164,37 +292,95 @@ def _utt_lens_of(batch) -> Optional[np.ndarray]:
     return np.asarray(mask).sum(axis=-1).astype(np.int32)
 
 
-def generate_sharded(make_engine: Callable[[int], object],
+def resolve_engine_factory(spec: str) -> Callable:
+    """``"module:function"`` -> the factory callable.  The factory
+    contract (process-crossing, so it must be importable by name):
+    ``factory(worker_id: int, kwargs: dict) -> engine`` with the engine
+    exposing ``forward_topk(batch) -> (vals, idx)``."""
+    mod, _, fn = spec.partition(":")
+    if not mod or not fn:
+        raise ValueError(f"engine spec {spec!r}: want 'module:function'")
+    return getattr(importlib.import_module(mod), fn)
+
+
+def prepare_ledger(store, n_items: int, n_workers: int, *,
+                   ledger_path: Optional[str] = None,
+                   wave: Optional[int] = None) -> WorkLedger:
+    """Fresh-vs-resume wave selection shared by the in-process and
+    multi-process drivers.
+
+    A ledger with unfinished ranges is a killed run — resume it at its
+    recorded wave.  Otherwise (no ledger, or a completed one) this is a
+    fresh generation pass and (unless ``wave`` is forced) it supersedes
+    the store's live shards at ``store.next_wave()`` — so a deleted
+    ledger, a different ledger_path, or a completed re-run all start
+    above the live wave instead of tripping stale-wave rejection.
+    """
+    ledger_path = ledger_path or os.path.join(store.root, "gen_ledger.json")
+    ranges = shard_ranges(n_items, n_workers)
+    fresh_wave = store.next_wave() if wave is None else wave
+    if not os.path.exists(ledger_path):       # brand-new pass
+        return WorkLedger.open(ledger_path, ranges, wave=fresh_wave)
+    if WorkLedger.peek_all_done(ledger_path):
+        # completed pass: a new wave, freely repartitionable (the old
+        # partition is history — only an *unfinished* ledger pins ranges)
+        return WorkLedger.fresh(ledger_path, ranges, wave=fresh_wave)
+    return WorkLedger.open(ledger_path, ranges)
+
+
+def generate_sharded(make_engine: Union[Callable[[int], object], str],
                      batches: Sequence[dict], store, *,
                      n_workers: int = 1, ledger_path: Optional[str] = None,
-                     wave: Optional[int] = None) -> Dict:
+                     wave: Optional[int] = None, processes: int = 0,
+                     engine_kwargs: Optional[dict] = None,
+                     crash: Optional[dict] = None,
+                     supervisor_opts: Optional[dict] = None) -> Dict:
     """Pre-formed dict batches -> manifest shards, partitioned over workers.
 
     make_engine(worker_id) -> an object with ``forward_topk(batch)``
     (a StreamingEngine or TeacherRunner); engines are created lazily,
     one per worker that actually claims work.  Shard i holds batch i's
     frames — the trainer-aligned layout ``distill_shard_source`` reads.
+    ``make_engine`` may instead be a ``"module:function"`` factory spec
+    (called as ``factory(worker_id, engine_kwargs)``) — required for
+    the process driver, accepted in-process so both paths can run the
+    byte-identical engine.
 
-    Wave selection: a ledger with unfinished ranges is a killed run —
-    resume it at its recorded wave.  Otherwise (no ledger, or a
-    completed one) this is a fresh generation pass and (unless ``wave``
-    is forced) it supersedes the store's live shards at
-    ``store.next_wave()`` — so a deleted ledger, a different
-    ledger_path, or a completed re-run all start above the live wave
-    instead of tripping the store's stale-wave rejection.
+    ``processes=N`` (N >= 1) executes the SAME ledger protocol as N
+    real OS processes through ``repro.runtime.workers``: a supervisor
+    spawns N workers that race ``claim_shared`` on the ledger, write
+    shards through locked manifest commits, and heartbeat; dead or hung
+    workers have their claims stolen and the wave still completes.  The
+    resulting manifest is **bitwise identical** to the in-process path
+    (deterministic shard contents, same wave, sorted manifest) — pinned
+    in tests.  ``crash``/``supervisor_opts`` are fault-injection and
+    tuning passthroughs (see ``runtime.workers``).
+
+    Wave selection (both drivers): see :func:`prepare_ledger`.
     """
-    ledger_path = ledger_path or os.path.join(store.root, "gen_ledger.json")
-    ranges = shard_ranges(len(batches), n_workers)
-    fresh_wave = store.next_wave() if wave is None else wave
-    if not os.path.exists(ledger_path):       # brand-new pass
-        ledger = WorkLedger.open(ledger_path, ranges, wave=fresh_wave)
-    elif WorkLedger.peek_all_done(ledger_path):
-        # completed pass: a new wave, freely repartitionable (the old
-        # partition is history — only an *unfinished* ledger pins ranges)
-        ledger = WorkLedger.fresh(ledger_path, ranges, wave=fresh_wave)
-    else:
-        ledger = WorkLedger.open(ledger_path, ranges)
+    ledger = prepare_ledger(store, len(batches), n_workers,
+                            ledger_path=ledger_path, wave=wave)
     resumed = ledger.n_done > 0
+
+    if processes and processes >= 1:
+        from repro.runtime.workers import run_supervised_generation
+        if not isinstance(make_engine, str):
+            raise ValueError(
+                "generate_sharded(processes=N) needs a 'module:function' "
+                "engine spec — a closure cannot cross a process boundary")
+        rep = run_supervised_generation(
+            ledger, batches, store, engine_spec=make_engine,
+            engine_kwargs=engine_kwargs or {}, n_procs=processes,
+            crash=crash, **(supervisor_opts or {}))
+        rep.update({"n_shards": len(batches), "n_workers": n_workers,
+                    "wave": ledger.wave, "resumed": resumed})
+        return rep
+
+    if isinstance(make_engine, str):
+        factory = resolve_engine_factory(make_engine)
+        kw = engine_kwargs or {}
+        make_engine = lambda w: factory(w, kw)  # noqa: E731
+
     engines: Dict[int, object] = {}
     n_written = 0
     worker = 0

@@ -1,0 +1,53 @@
+"""Execution runtime: process/device topology under every other subsystem.
+
+Four layers, lowest first:
+
+* ``env`` — environment bootstrap that must run **before the first jax
+  import** (XLA flags are read once, at backend init): host-platform
+  device-count override (N-device CPU mesh on one machine), GPU XLA
+  flags (async collectives, latency-hiding scheduler), x64/NaN-debug
+  toggles, and ``describe()``, the topology snapshot CI archives.
+* ``procs`` — process primitives with no jax anywhere: ``file_lock``
+  (fcntl advisory locks serializing shared-filesystem JSON),
+  ``Heartbeat`` (liveness files), ``CrashPoint`` (SIGKILL fault
+  injection).
+* ``workers`` — the multi-process target-generation fleet: worker CLI,
+  supervisor with stale-claim stealing and respawn, engine factory
+  specs.  Backend of ``pipeline.generate_sharded(processes=N)``.
+* ``cluster`` — ``jax.distributed`` launch paths (coordinator /
+  process-id / num-processes from env or flags; single-process no-op)
+  and mesh topology helpers (``worker_mesh``: the widest device mesh
+  the worker count divides).
+
+Import discipline: ``procs`` imports nothing of repro, ``env`` imports
+no jax at module level, ``workers`` stays numpy-only until an engine
+factory runs.  Only ``cluster`` (and ``env.describe``) touch jax, both
+lazily — so spawning a worker process never pays (or poisons) a jax
+init.  This module re-exports lazily for the same reason.
+"""
+_LAZY = {
+    "EnvConfig": "repro.runtime.env",
+    "bootstrap": "repro.runtime.env",
+    "bootstrap_from_env": "repro.runtime.env",
+    "describe": "repro.runtime.env",
+    "file_lock": "repro.runtime.procs",
+    "Heartbeat": "repro.runtime.procs",
+    "CrashPoint": "repro.runtime.procs",
+    "ClusterConfig": "repro.runtime.cluster",
+    "ClusterInfo": "repro.runtime.cluster",
+    "initialize": "repro.runtime.cluster",
+    "widest_divisor": "repro.runtime.cluster",
+    "worker_mesh": "repro.runtime.cluster",
+    "Supervisor": "repro.runtime.workers",
+    "run_supervised_generation": "repro.runtime.workers",
+    "linear_probe_engine": "repro.runtime.workers",
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

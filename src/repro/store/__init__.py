@@ -20,12 +20,21 @@ archives through the same API.  The codecs (``topk_compress`` /
 through ``repro.pipeline.generate`` and consumers read through
 ``repro.train.data.distill_shard_source``.
 """
-from repro.core.logit_store import (full_bytes_per_frame,
-                                    storage_bytes_per_frame)
 from repro.store.logit_store import LogitStoreV2, migrate_v1
 from repro.store.manifest import (Manifest, ShardCorruptionError,
                                   ShardEntry, StaleWaveError, StoreError,
                                   file_checksum)
+
+
+def __getattr__(name):
+    # lazy: the byte-math helpers live in the jax-importing v1 module,
+    # and multi-process generation workers (repro.runtime.workers)
+    # import this package on a spawn-time budget — they must stay
+    # numpy-only unless the engine itself wants jax
+    if name in ("storage_bytes_per_frame", "full_bytes_per_frame"):
+        from repro.core import logit_store as _v1
+        return getattr(_v1, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "LogitStoreV2", "migrate_v1",

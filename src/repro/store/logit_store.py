@@ -48,7 +48,7 @@ from typing import Iterable, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.logit_store import ShardMeta
+from repro.runtime.procs import file_lock
 from repro.store.manifest import (Manifest, ShardCorruptionError,
                                   ShardEntry, StoreError, file_checksum)
 
@@ -60,8 +60,18 @@ class LogitStoreV2:
     """Manifest-backed sharded archive of (vals f16, idx i32) per frame."""
 
     def __init__(self, root: str, *, k: int = 0, vocab: int = 0,
-                 gc_on_open: bool = True):
+                 gc_on_open: bool = True, shared: bool = False):
+        """``shared=True`` is the multi-process-writer mode: every
+        manifest commit becomes a locked reload-merge-save (N worker
+        processes with disjoint shard ids then interleave commits
+        without losing each other's entries), and gc-on-open is forced
+        off — a worker must never sweep a sibling's staged files.  The
+        supervisor (single process, before the workers exist) opens the
+        store unshared and does the gc."""
         self.root = root
+        self.shared = shared
+        if shared:
+            gc_on_open = False
         os.makedirs(os.path.join(root, _SHARD_DIR), exist_ok=True)
         if Manifest.exists(root):
             self.manifest = Manifest.load(root)
@@ -114,11 +124,30 @@ class LogitStoreV2:
             k=int(idx.shape[-1]), vocab=self.vocab, files=files,
             checksum=file_checksum(files, self.root), format="v2")
 
+    @property
+    def _manifest_lock(self) -> str:
+        return os.path.join(self.root, "manifest.lock")
+
     def _commit(self, entry: ShardEntry):
         """Manifest swap; the superseded entry is *retired* (files kept
-        on disk for wave-pinned readers) and reclaimed by ``gc()``."""
-        self.manifest.supersede(entry)
-        self.manifest.save(self.root)
+        on disk for wave-pinned readers) and reclaimed by ``gc()``.
+
+        Shared mode serializes the read-modify-write: under the
+        manifest lock, the on-disk manifest (which siblings may have
+        advanced) is reloaded, this entry superseded into *that*, and
+        the result saved — so concurrent writers with disjoint shard
+        ids compose instead of clobbering."""
+        if not self.shared:
+            self.manifest.supersede(entry)
+            self.manifest.save(self.root)
+            return
+        with file_lock(self._manifest_lock):
+            if Manifest.exists(self.root):
+                self.manifest = Manifest.load(self.root)
+                self.manifest.k = self.manifest.k or self.k
+                self.manifest.vocab = self.manifest.vocab or self.vocab
+            self.manifest.supersede(entry)
+            self.manifest.save(self.root)
 
     def append_shard(self, shard_id: int, vals, idx, utt_lens=None, *,
                      wave: int = 0) -> str:
@@ -257,8 +286,12 @@ class LogitStoreV2:
     def next_wave(self) -> int:
         return self.manifest.max_wave() + 1
 
-    def stats(self) -> ShardMeta:
+    def stats(self) -> "ShardMeta":
         """O(manifest) — v1 walked and decompressed every shard."""
+        # deferred import: ShardMeta lives in the jax-importing v1
+        # module, and the multi-process generation workers (which never
+        # call stats) must stay numpy-only for fast spawn
+        from repro.core.logit_store import ShardMeta
         return ShardMeta(n_frames=self.manifest.n_frames(),
                          k=self.k, vocab=self.vocab)
 

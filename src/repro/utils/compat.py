@@ -1,11 +1,15 @@
 """Version-compat shims for jax API churn.
 
-``AbstractMesh``'s constructor changed across jax releases: 0.4.37 takes
-a single shape tuple ``((name, size), ...)``; 0.5+ split it into
-``(axis_sizes, axis_names)``.  The tests build device-free meshes for
-divisibility checks, so they go through this helper instead of pinning
-one signature (ROADMAP follow-up: lets the ``jax>=0.4.37,<0.5`` pin
-relax once a 0.5+ toolchain is validated).
+The pin is ``jax>=0.4.37`` with no upper bound; every API that moved
+between 0.4.x and current jax goes through a shim here instead of
+version-gating at the call sites:
+
+* ``AbstractMesh`` — 0.4.37 takes a single shape tuple
+  ``((name, size), ...)``; 0.5+ split it into
+  ``(axis_sizes, axis_names)``.
+* ``shard_map`` — graduated from ``jax.experimental.shard_map`` to
+  ``jax.shard_map`` (0.6+, experimental path deprecated then removed),
+  and its ``check_rep`` kwarg was renamed ``check_vma``.
 """
 from __future__ import annotations
 
@@ -22,3 +26,21 @@ def abstract_mesh(axes: Sequence[Tuple[str, int]]):
         sizes = tuple(s for _, s in axes)              # jax 0.5+ form
         names = tuple(n for n, _ in axes)
         return AbstractMesh(sizes, names)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_rep: bool = True):
+    """``shard_map`` across its module move and kwarg rename.
+
+    Call sites keep the 0.4-era spelling (``check_rep``); here it maps
+    to ``check_vma`` when the installed jax only knows the new name.
+    """
+    import jax
+    impl = getattr(jax, "shard_map", None)
+    if impl is None:
+        from jax.experimental.shard_map import shard_map as impl
+    try:
+        return impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    check_rep=check_rep)
+    except TypeError:
+        return impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    check_vma=check_rep)

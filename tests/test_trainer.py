@@ -12,6 +12,7 @@ from repro.checkpoint import CheckpointStore
 from repro.distributed.bmuf import BMUFConfig
 from repro.distributed.gtc import GTCConfig
 from repro.optim import momentum_init, momentum_update
+from repro.runtime.cluster import worker_mesh
 from repro.train import (GTC, BMUFVmap, JsonlSink, ListSink, Local,
                          TrainBatch, Trainer, TrainState, chain,
                          epoch_source, make_sgd_step)
@@ -147,19 +148,47 @@ def test_gtc_shardmap_single_compile_across_lr_phases():
     """The new strategy keeps the Trainer's one-executable property:
     an lr sweep through the shard_map step compiles exactly once (the
     strategy's place() lays init state out on the mesh so even the
-    first call hits the steady-state executable)."""
+    first call hits the steady-state executable).
+
+    Count actual XLA compilations via the jax_log_compiles log, not
+    ``_cache_size()``: on a >1-device mesh the C++ fastpath can hold a
+    second cache entry for the same single executable."""
+    import logging
+
     from repro.train import GTCShardMap
+
+    class _CompileCounter(logging.Handler):
+        def __init__(self):
+            super().__init__()
+            self.compiles = []
+
+        def emit(self, record):
+            msg = record.getMessage()
+            if "Finished XLA compilation" in msg:
+                self.compiles.append(msg)
+
     batch = _problem()
-    mesh = jax.make_mesh((1,), ("data",))
+    mesh = worker_mesh(2)
     tr = Trainer(GTCShardMap(GTCConfig(tau=1e-3, n_workers=2), mesh,
                              clip=0.0), {"quad": quad_loss})
     state = tr.init_state(_params())
     lrs = [0.1 * (0.85 ** i) for i in range(6)]
     # 2 microbatches per update: 12 source items -> 6 updates
     src = [TrainBatch(batch, lr, "quad") for lr in lrs for _ in range(2)]
-    state = tr.fit(state, src, resume=False)
+    counter = _CompileCounter()
+    logger = logging.getLogger("jax._src.dispatch")
+    old_level = logger.level
+    logger.addHandler(counter)
+    logger.setLevel(logging.DEBUG)
+    try:
+        with jax.log_compiles():
+            state = tr.fit(state, src, resume=False)
+    finally:
+        logger.removeHandler(counter)
+        logger.setLevel(old_level)
     assert int(state.step) == 6
-    assert tr.updates["quad"]._cache_size() == 1
+    updates = [m for m in counter.compiles if "jit(update)" in m]
+    assert len(updates) == 1, counter.compiles
 
 
 def test_gtc_shardmap_groups_microbatches_per_worker():
@@ -167,7 +196,7 @@ def test_gtc_shardmap_groups_microbatches_per_worker():
     group is dropped (same block semantics as BMUF)."""
     from repro.train import GTCShardMap
     batch = _problem(n=16)
-    mesh = jax.make_mesh((1,), ("data",))
+    mesh = worker_mesh(2)
     tr = Trainer(GTCShardMap(GTCConfig(tau=1e-3, n_workers=2), mesh,
                              clip=0.0), {"quad": quad_loss})
     state = tr.fit(tr.init_state(_params()),
@@ -181,7 +210,7 @@ def test_gtc_shardmap_resume_preserves_worker_residuals(tmp_path):
     uninterrupted result."""
     from repro.train import GTCShardMap
     batch = _problem(n=32)
-    mesh = jax.make_mesh((1,), ("data",))
+    mesh = worker_mesh(2)
     lrs = [0.05] * 12                        # 6 updates at W=2
     mk = lambda ck: Trainer(
         GTCShardMap(GTCConfig(tau=1e-3, n_workers=2), mesh, clip=0.0),
@@ -220,7 +249,7 @@ def test_gtc_shardmap_rng_distinct_per_worker():
                                   "n0": noise}
 
     batch = _problem(n=16)
-    mesh = jax.make_mesh((1,), ("data",))
+    mesh = worker_mesh(2)
     strat = GTCShardMap(GTCConfig(tau=1e-3, n_workers=2), mesh, clip=0.0)
     # drive the gtc_lib step directly: its metrics keep the (W,) worker
     # dim the strategy's update would average away
@@ -404,7 +433,9 @@ def test_bmuf_sharded_rng_matches_vmap_path():
     """Stochastic losses through BMUFShardMap == BMUFVmap bitwise on a
     1-device mesh: the per-worker keys are folded with *global* worker
     indices outside the shard_map (crossing as raw key data), so the
-    two execution paths of the same math stay interchangeable."""
+    two execution paths of the same math stay interchangeable.  On a
+    >1-device mesh the cross-device psum reduction order shifts the
+    block mean by float32 ULPs, so equality relaxes to that tolerance."""
     from repro.distributed.bmuf import BMUFConfig
     from repro.train import BMUFShardMap
 
@@ -416,14 +447,19 @@ def test_bmuf_sharded_rng_matches_vmap_path():
     st_v = tr_v.fit(tr_v.init_state(_params(), seed=5), src(),
                     resume=False)
 
-    mesh = jax.make_mesh((1,), ("data",))
+    mesh = worker_mesh(2)
     tr_s = Trainer(BMUFShardMap(cfg, mesh, clip=0.0),
                    {"noisy": noisy_loss})
     st_s = tr_s.fit(tr_s.init_state(_params(), seed=5), src(),
                     resume=False)
     assert int(st_v.step) == int(st_s.step) == 2
-    np.testing.assert_array_equal(np.asarray(st_v.params["w"]),
-                                  np.asarray(st_s.params["w"]))
+    if mesh.devices.size == 1:
+        np.testing.assert_array_equal(np.asarray(st_v.params["w"]),
+                                      np.asarray(st_s.params["w"]))
+    else:
+        np.testing.assert_allclose(np.asarray(st_v.params["w"]),
+                                   np.asarray(st_s.params["w"]),
+                                   atol=1e-7, rtol=0)
 
 
 # ------------------------------------------------- LR schedules as lr
