@@ -106,18 +106,29 @@ def chunked_ce(h, w_unembed, labels, *, chunk: int = 8192,
 
 def chunked_topk_distill_ce(h, w_unembed, topk_vals, topk_idx, *,
                             chunk: int = 8192, softcap: float = 0.0,
-                            mask=None):
+                            mask=None, use_kernel: bool = False,
+                            interpret=None):
     """Paper §3.2.2 loss: CE between the renormalized top-k teacher
     distribution and the student's full-vocab distribution.
 
     teacher q_i = softmax over the k stored logits (missing = NEG_FILL,
     i.e. effectively zero mass).  loss = Σ_i q_i (lse_student - z_i).
+
+    ``use_kernel=True`` routes the logsumexp+gather inner loop through
+    ``kernels.sparse_ce`` (Pallas; differentiable via its custom_vjp —
+    the streamed XLA scan below stays the default and the oracle).
+    ``interpret`` follows the kernels/_dispatch convention.
     """
     b, s, d = h.shape
     k = topk_idx.shape[-1]
     hf = h.reshape(b * s, d)
     idx = topk_idx.reshape(b * s, k)
     vals = topk_vals.reshape(b * s, k).astype(jnp.float32)
+    if use_kernel:
+        from repro.kernels.sparse_ce import topk_distill_ce
+        return topk_distill_ce(
+            hf, w_unembed, vals, idx, softcap=softcap, interpret=interpret,
+            mask=None if mask is None else mask.reshape(b * s))
     lse, z = _chunked_logsumexp_and_gather(hf, w_unembed, idx, chunk=chunk,
                                            softcap=softcap)
     q = jax.nn.softmax(vals, axis=-1)                    # teacher top-k mass

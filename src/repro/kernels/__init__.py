@@ -3,27 +3,42 @@
 Each subpackage: kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
 ops.py (jit'd public wrapper), ref.py (pure-jnp oracle).  All validated
 in interpret=True mode on CPU; `interpret=False` is the TPU path.
+Backend resolution is shared (``kernels/_dispatch``): every wrapper
+takes ``interpret=None`` = compiled-on-TPU / interpreter-elsewhere, and
+ops with a production-grade ref twin additionally take
+``use_kernel=None`` = Pallas-on-TPU / ref-twin-elsewhere.
 
-  topk_logits   — teacher target generation: top-k=20 over senone/token
-                  vocab via k-round max-extraction on VMEM tiles (§3.2.2)
-  sparse_ce     — student loss: fused full-vocab logsumexp + teacher-index
-                  gather streaming (D,Vt) unembedding tiles (§3.2.2)
-  swa_attention — banded flash attention whose *grid* skips out-of-window
-                  kv blocks (long_500k path for SWA archs)
-  gtc_compress  — error-feedback threshold sparsification, fused
-                  elementwise pass (§3.5 / Strom 2015)
+  topk_logits      — teacher target generation: top-k=20 over senone/token
+                     vocab via k-round max-extraction on VMEM tiles (§3.2.2)
+  sparse_ce        — student loss: fused full-vocab logsumexp + teacher-index
+                     gather streaming (D,Vt) unembedding tiles (§3.2.2);
+                     differentiable (custom_vjp, streamed backward)
+  swa_attention    — banded flash attention whose *grid* skips out-of-window
+                     kv blocks (long_500k path for SWA archs)
+  gtc_compress     — error-feedback threshold sparsification, fused
+                     elementwise pass (§3.5 / Strom 2015)
+  decode_attention — fused single-token decode tail: RoPE + one-hot ring
+                     write + slot-validity mask + softmax·V in one pass
+                     (linear / SWA-ring / paged-gather variants)
+  topk_sample      — fused top-k/top-p Gumbel sampler: per-tile top-k
+                     candidates merged and sampled in one (B, k_cap) pass
 """
+from repro.kernels.decode_attention import (decode_attention,
+                                            decode_attention_ref)
 from repro.kernels.gtc_compress import gtc_compress, gtc_compress_ref
 from repro.kernels.sparse_ce import (sparse_ce_lse_gather,
                                      sparse_ce_lse_gather_ref,
                                      topk_distill_ce, topk_distill_ce_ref)
 from repro.kernels.swa_attention import swa_attention, swa_attention_ref
 from repro.kernels.topk_logits import topk_logits, topk_logits_ref
+from repro.kernels.topk_sample import topk_sample, topk_sample_ref
 
 __all__ = [
+    "decode_attention", "decode_attention_ref",
     "gtc_compress", "gtc_compress_ref",
     "sparse_ce_lse_gather", "sparse_ce_lse_gather_ref",
     "topk_distill_ce", "topk_distill_ce_ref",
     "swa_attention", "swa_attention_ref",
     "topk_logits", "topk_logits_ref",
+    "topk_sample", "topk_sample_ref",
 ]

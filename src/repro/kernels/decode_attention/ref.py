@@ -1,0 +1,61 @@
+"""Pure-jnp oracle for the fused decode-attention kernel.
+
+This is *the same math as the XLA decode path* in
+``models/attention.py:attention_decode`` — same helper for the RoPE
+rotation (``layers.apply_rope``), same one-hot ring write
+(``attention.row_update``), same slot-validity mask
+(``attention.decode_slot_validity``), same einsum/cast ordering — so
+
+  * the kernel's parity tests pin against exactly what production
+    computes, and
+  * off-TPU the ops wrapper can serve this twin as the production path
+    with greedy decode staying *bitwise* token-identical to the
+    pre-kernel engine (the Pallas interpreter is ~5x slower than plain
+    XLA on CPU for decode shapes; it is the test surface, not the
+    serving path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models.attention import NEG_INF, decode_slot_validity, row_update
+
+
+def decode_attention_ref(q, k_new, v_new, cache_k, cache_v, pos, *,
+                         window: int = 0, softcap: float = 0.0,
+                         rope_theta: float = 0.0, write: bool = True):
+    """One-token decode tail.  q (B,Hq,1,hd) and k_new/v_new (B,Hkv,1,hd)
+    are post-projection (and post-qk-norm), pre-RoPE; cache_k/cache_v
+    (B,Hkv,S,hd); pos (B,) int32 per-row positions.
+
+    ``rope_theta>0`` applies RoPE at ``pos`` to q and k_new;
+    ``write=True`` ring-writes k_new/v_new at ``pos % S`` (the paged
+    path pre-writes its pool and calls with ``write=False`` on the
+    gathered view); ``window>0`` selects the SWA-ring validity mask.
+
+    Returns (o (B,Hq,1,hd) f32, new cache_k, new cache_v).
+    """
+    b, hq, _, hd = q.shape
+    hkv = cache_k.shape[1]
+    slots = cache_k.shape[2]
+    if rope_theta:
+        cos, sin = layers.rope_tables(pos[:, None, None], hd, rope_theta)
+        q = layers.apply_rope(q, cos, sin)
+        k_new = layers.apply_rope(k_new, cos, sin)
+    if write:
+        slot = jax.lax.rem(pos, slots) if slots else pos
+        cache_k = row_update(cache_k, k_new.astype(cache_k.dtype), slot)
+        cache_v = row_update(cache_v, v_new.astype(cache_v.dtype), slot)
+    valid = decode_slot_validity(pos, slots, window=window)
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(b, hkv, hq // hkv, 1, hd)
+    s_ = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                    cache_k.astype(jnp.float32)) * scale
+    s_ = layers.softcap(s_, softcap)
+    s_ = jnp.where(valid[:, None, None, None, :], s_, NEG_INF)
+    p = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, cache_v.astype(jnp.float32))
+    return o.reshape(b, hq, 1, hd), cache_k, cache_v

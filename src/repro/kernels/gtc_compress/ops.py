@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels._dispatch import auto_interpret
 from repro.kernels.gtc_compress.kernel import TILE, gtc_compress_flat
 
 
@@ -26,10 +27,10 @@ def gtc_compress(grad, residual, tau, *, interpret=None):
 
     grad/residual: same shape, any dims; tau: python float or 0-d array.
     Returns (send, new_residual) shaped like grad, float32.
-    ``interpret=None`` auto-selects: compiled on TPU, interpret mode
-    everywhere else — so callers (``distributed.gtc.compress_leaf``
-    behind ``GTCConfig.use_kernel``) need no backend switch of their own.
+    ``interpret=None`` auto-selects via ``kernels._dispatch``: compiled
+    on TPU, interpret mode everywhere else — so callers
+    (``distributed.gtc.compress_leaf`` behind ``GTCConfig.use_kernel``)
+    need no backend switch of their own.
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    return _gtc_compress_jit(grad, residual, tau, interpret=interpret)
+    return _gtc_compress_jit(grad, residual, tau,
+                             interpret=auto_interpret(interpret))

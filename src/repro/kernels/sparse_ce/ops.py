@@ -1,4 +1,16 @@
-"""Public wrappers: padding + the distill-CE loss built on the kernel."""
+"""Public wrappers: padding + the distill-CE loss built on the kernel.
+
+``interpret=None`` auto-detects via kernels/_dispatch (compiled on TPU,
+interpreter elsewhere).  Both ops are differentiable wrt (h, w): JAX
+cannot autodiff through a ``pallas_call``, so ``sparse_ce_lse_gather``
+carries a ``custom_vjp`` whose backward pass is a *streamed XLA chunk
+recompute* — for each vocab chunk it rebuilds the capped logits,
+reconstitutes the exact softmax from the saved forward ``lse``,
+scatter-adds the gathered-logit cotangent at the teacher indices, and
+chains through the softcap (d tanh(x/c)*c = 1 - (capped/c)^2) before
+accumulating dh and the dw chunk.  Peak memory stays O(T*chunk + D*V),
+never (T, V) — the same contract as the forward kernel.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,19 +18,17 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels._dispatch import auto_interpret
 from repro.kernels.sparse_ce.kernel import sparse_ce_tiles
 
 
 @functools.partial(jax.jit, static_argnames=("softcap", "interpret",
                                              "v_tile"))
-def sparse_ce_lse_gather(h, w, idx, *, softcap: float = 0.0,
-                         v_tile: int = 1024, interpret: bool = True):
-    """h (T,D), w (D,V), idx (T,K) -> (lse (T,), gathered (T,K)) f32.
-
-    Pads T to the 128-row tile and V to the vocab tile; padding rows cost
-    compute but never flow back (caller slices).  For D > 8192 chunk D
-    upstream (none of the assigned archs need it: max d_model is 8192).
-    """
+def _sparse_ce_lse_gather_jit(h, w, idx, *, softcap: float,
+                              v_tile: int, interpret: bool):
+    """Pads T to the 128-row tile and V to the vocab tile; padding rows
+    cost compute but never flow back (caller slices).  For D > 8192
+    chunk D upstream (none of the assigned archs need it)."""
     t, d = h.shape
     v = w.shape[1]
     t_tile = 128 if t >= 128 else max(8, 1 << (t - 1).bit_length())
@@ -34,11 +44,91 @@ def sparse_ce_lse_gather(h, w, idx, *, softcap: float = 0.0,
     return lse[:t, 0], g[:t]
 
 
-@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+@functools.partial(jax.jit, static_argnames=("softcap", "chunk"))
+def _lse_gather_bwd(h, w, idx, lse, g_lse, g_z, *, softcap: float,
+                    chunk: int = 1024):
+    t, d = h.shape
+    v = w.shape[1]
+    nchunks = (v + chunk - 1) // chunk
+    wpad = jnp.pad(w, ((0, 0), (0, nchunks * chunk - v)))
+    rows = jnp.arange(t)
+
+    def body(carry, ci):
+        dh, dw = carry
+        wc = jax.lax.dynamic_slice_in_dim(wpad, ci * chunk, chunk, axis=1)
+        raw = (h @ wc.astype(h.dtype)).astype(jnp.float32)
+        if softcap:
+            capped = jnp.tanh(raw / softcap) * softcap
+        else:
+            capped = raw
+        vid = ci * chunk + jnp.arange(chunk)
+        # exact softmax from the saved forward lse; padded tail -> 0
+        p = jnp.where(vid[None, :] < v,
+                      jnp.exp(capped - lse[:, None]), 0.0)
+        dz = g_lse[:, None] * p
+        loc = idx - ci * chunk
+        inside = (loc >= 0) & (loc < chunk)
+        dz = dz.at[rows[:, None], jnp.clip(loc, 0, chunk - 1)].add(
+            jnp.where(inside, g_z, 0.0))
+        if softcap:
+            dz = dz * (1.0 - (capped / softcap) ** 2)
+        dh = dh + dz @ wc.astype(jnp.float32).T
+        dwc = h.astype(jnp.float32).T @ dz
+        dw = jax.lax.dynamic_update_slice_in_dim(dw, dwc, ci * chunk,
+                                                 axis=1)
+        return (dh, dw), None
+
+    init = (jnp.zeros((t, d), jnp.float32),
+            jnp.zeros((d, nchunks * chunk), jnp.float32))
+    (dh, dw), _ = jax.lax.scan(body, init, jnp.arange(nchunks))
+    return dh.astype(h.dtype), dw[:, :v].astype(w.dtype)
+
+
+@functools.lru_cache(maxsize=None)
+def _lse_gather_fn(softcap: float, v_tile: int, interpret: bool):
+    @jax.custom_vjp
+    def f(h, w, idx):
+        return _sparse_ce_lse_gather_jit(h, w, idx, softcap=softcap,
+                                         v_tile=v_tile, interpret=interpret)
+
+    def fwd(h, w, idx):
+        out = _sparse_ce_lse_gather_jit(h, w, idx, softcap=softcap,
+                                        v_tile=v_tile, interpret=interpret)
+        return out, (h, w, idx, out[0])
+
+    def bwd(res, g):
+        h, w, idx, lse = res
+        g_lse, g_z = g
+        dh, dw = _lse_gather_bwd(h, w, idx, lse, g_lse, g_z,
+                                 softcap=softcap)
+        return dh, dw, None
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def sparse_ce_lse_gather(h, w, idx, *, softcap: float = 0.0,
+                         v_tile: int = 1024, interpret=None):
+    """h (T,D), w (D,V), idx (T,K) -> (lse (T,), gathered (T,K)) f32.
+
+    Differentiable wrt h and w (custom_vjp; see module docstring).
+    ``interpret=None`` auto-detects the backend.
+    """
+    fn = _lse_gather_fn(float(softcap), int(v_tile),
+                        auto_interpret(interpret))
+    return fn(h, w, idx)
+
+
 def topk_distill_ce(h, w, topk_vals, topk_idx, *, softcap: float = 0.0,
-                    interpret: bool = True):
-    """The paper's SSL loss, fused-kernel path.  h (T,D) flat frames."""
+                    interpret=None, mask=None):
+    """The paper's SSL loss, fused-kernel path.  h (T,D) flat frames;
+    ``mask`` (T,) optional frame-validity weights (masked mean, matching
+    ``core/distill.chunked_topk_distill_ce``)."""
     lse, z = sparse_ce_lse_gather(h, w, topk_idx, softcap=softcap,
                                   interpret=interpret)
     q = jax.nn.softmax(topk_vals.astype(jnp.float32), axis=-1)
-    return jnp.mean(jnp.sum(q * (lse[:, None] - z), axis=-1))
+    nll = jnp.sum(q * (lse[:, None] - z), axis=-1)
+    if mask is not None:
+        mk = mask.reshape(-1).astype(jnp.float32)
+        return jnp.sum(nll * mk) / jnp.maximum(mk.sum(), 1.0)
+    return jnp.mean(nll)

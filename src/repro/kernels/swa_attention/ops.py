@@ -6,19 +6,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels._dispatch import auto_interpret
 from repro.kernels.swa_attention.kernel import swa_attention_tiles
 
 
 @functools.partial(jax.jit, static_argnames=("window", "softcap",
                                              "interpret"))
-def swa_attention(q, k, v, window: int, *, softcap: float = 0.0,
-                  interpret: bool = True):
-    """q (B,Hq,S,hd); k/v (B,Hkv,S,hd), Hq % Hkv == 0.  Causal + window.
-
-    Returns (B,Hq,S,hd) f32.  Pads S to the query tile and hd to 128
-    lanes; GQA is realized by broadcasting kv heads (the kernel is
-    bandwidth-bound on kv tiles either way).
-    """
+def _swa_attention_jit(q, k, v, *, window: int, softcap: float,
+                       interpret: bool):
     b, hq, s, hd = q.shape
     hkv = k.shape[1]
     g = hq // hkv
@@ -40,3 +35,16 @@ def swa_attention(q, k, v, window: int, *, softcap: float = 0.0,
     o = swa_attention_tiles(qf, kf, vf, window=window, t_q=t_q, t_kv=t_kv,
                             softcap=softcap, interpret=interpret)
     return o.reshape(b, hq, s + sp, hd + hdp)[:, :, :s, :hd]
+
+
+def swa_attention(q, k, v, window: int, *, softcap: float = 0.0,
+                  interpret=None):
+    """q (B,Hq,S,hd); k/v (B,Hkv,S,hd), Hq % Hkv == 0.  Causal + window.
+
+    Returns (B,Hq,S,hd) f32.  Pads S to the query tile and hd to 128
+    lanes; GQA is realized by broadcasting kv heads (the kernel is
+    bandwidth-bound on kv tiles either way).  ``interpret=None``
+    auto-detects via ``kernels._dispatch``.
+    """
+    return _swa_attention_jit(q, k, v, window=window, softcap=softcap,
+                              interpret=auto_interpret(interpret))

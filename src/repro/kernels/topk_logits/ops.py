@@ -6,18 +6,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels._dispatch import auto_interpret
 from repro.kernels.topk_logits.kernel import NEG, topk_logits_tiles
 
 
 @functools.partial(jax.jit, static_argnames=("k", "v_tile", "interpret"))
-def topk_logits(logits, k: int = 20, *, v_tile: int = 2048,
-                interpret: bool = True):
-    """logits (..., V) -> (vals (..., k) f32, idx (..., k) i32), sorted desc.
-
-    Two-stage: Pallas per-tile top-k, then a lax.top_k merge over the
-    (tiny) candidate set.  Exact — every global top-k element is a local
-    tile top-k element.
-    """
+def _topk_logits_jit(logits, k: int, *, v_tile: int, interpret: bool):
     shape = logits.shape
     v = shape[-1]
     x = logits.reshape(-1, v)
@@ -36,3 +30,16 @@ def topk_logits(logits, k: int = 20, *, v_tile: int = 2048,
     idx = jnp.take_along_axis(cand_i[:r], mi, axis=1)
     return (mv.reshape(*shape[:-1], k),
             idx.reshape(*shape[:-1], k).astype(jnp.int32))
+
+
+def topk_logits(logits, k: int = 20, *, v_tile: int = 2048,
+                interpret=None):
+    """logits (..., V) -> (vals (..., k) f32, idx (..., k) i32), sorted desc.
+
+    Two-stage: Pallas per-tile top-k, then a lax.top_k merge over the
+    (tiny) candidate set.  Exact — every global top-k element is a local
+    tile top-k element.  ``interpret=None`` auto-detects via
+    ``kernels._dispatch``.
+    """
+    return _topk_logits_jit(logits, k, v_tile=v_tile,
+                            interpret=auto_interpret(interpret))

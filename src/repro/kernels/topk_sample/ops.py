@@ -1,0 +1,96 @@
+"""Public wrapper: fused top-k extraction + Gumbel-max sampling.
+
+``topk_sample`` replaces the decode engine's full-vocab argsort sampler
+with a two-stage kernel (per-tile top-k candidates, then merge+sample
+over (B, k_cap) — see kernel.py) or, off-TPU, the pure-jnp ref twin
+with the same bitwise semantics.  Dispatch follows kernels/_dispatch:
+``use_kernel=None`` auto-selects kernel-on-TPU / ref elsewhere;
+``interpret=None`` auto-selects compiled-on-TPU / interpreter elsewhere
+(parity tests pass use_kernel=True, interpret=True).
+
+The Gumbel noise is derived here, once, in plain XLA ops — (B, k_cap)
+from fold_in(PRNGKey(seed), pos) per row, applied by candidate rank —
+and handed to whichever backend runs, so sampled tokens are identical
+across backends by construction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels._dispatch import auto_interpret, auto_use_kernel
+from repro.kernels.topk_logits.kernel import NEG, topk_logits_tiles
+from repro.kernels.topk_sample.kernel import topk_sample_tiles
+from repro.kernels.topk_sample.ref import topk_sample_ref
+
+# Candidate-set width: the sampler's whole post-extraction state is
+# (B, K_CAP_DEFAULT).  top_k requests beyond this can't be honored by
+# the fused path (TokenServer rejects them at submit when fused).
+K_CAP_DEFAULT = 32
+
+
+def gumbel_rows(seeds, pos, k: int):
+    """Per-row rank-indexed Gumbel noise: (B,) seeds x (B,) pos ->
+    (B, k) f32.  Reproducible per (seed, pos) and independent of batch
+    composition — the same contract as serve/sampling."""
+    def row(seed, p):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), p)
+        return jax.random.gumbel(key, (k,), jnp.float32)
+    return jax.vmap(row)(seeds, pos)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k_cap", "greedy", "v_tile",
+                                    "interpret"))
+def _topk_sample_kernel(logits, temperature, top_k, top_p, gumbel, *,
+                        k_cap, greedy, v_tile=2048, interpret=False):
+    b, v = logits.shape
+    r_tile = 128 if b >= 128 else max(8, 1 << (b - 1).bit_length())
+    vt = max(min(v_tile, 1 << (v - 1).bit_length()), 128)
+    rpad = (-b) % r_tile
+    vpad = (-v) % vt
+    xp = jnp.pad(logits.astype(jnp.float32), ((0, rpad), (0, vpad)),
+                 constant_values=NEG)
+    cand_v, cand_i = topk_logits_tiles(xp, k=k_cap, r_tile=r_tile,
+                                       v_tile=vt, interpret=interpret)
+    cpad = (-cand_v.shape[1]) % 128
+    cand_v = jnp.pad(cand_v, ((0, 0), (0, cpad)), constant_values=NEG)
+    cand_i = jnp.pad(cand_i, ((0, 0), (0, cpad)))
+    pad1 = lambda a, dt: jnp.pad(a.astype(dt), (0, rpad))[:, None]
+    vals, idx, tok = topk_sample_tiles(
+        cand_v, cand_i, pad1(temperature, jnp.float32),
+        pad1(top_k, jnp.int32), pad1(top_p, jnp.float32),
+        jnp.pad(gumbel, ((0, rpad), (0, 0))),
+        k_cap=k_cap, greedy=greedy, interpret=interpret)
+    return vals[:b], idx[:b], tok[:b, 0]
+
+
+def topk_sample(logits, temperature=None, top_k=None, top_p=None,
+                seeds=None, pos=None, *, k_cap: int = K_CAP_DEFAULT,
+                greedy: bool = False, use_kernel=None, interpret=None):
+    """logits (B, V) -> (vals (B,k_cap) f32 desc, idx (B,k_cap) i32,
+    token (B,) i32) in one fused pass.
+
+    ``greedy=True`` (static): token is argmax(logits) bitwise; the
+    per-row knobs and seeds/pos are ignored.  Otherwise temperature /
+    top_k / top_p / seeds / pos are (B,) per-row arrays; temperature<=0
+    is the per-row greedy sentinel.  Nucleus mass is measured within
+    the top-k_cap candidate set (see ref.py for the exact semantics and
+    the cross-backend determinism contract).
+    """
+    b, v = logits.shape
+    kc = min(k_cap, v)
+    if greedy:
+        z32 = jnp.zeros((b,), jnp.float32)
+        temperature, top_k, top_p = z32, jnp.zeros((b,), jnp.int32), z32
+        gumbel = jnp.zeros((b, kc), jnp.float32)
+    else:
+        gumbel = gumbel_rows(seeds, pos, kc)
+    if not auto_use_kernel(use_kernel):
+        return topk_sample_ref(logits, temperature, top_k, top_p, gumbel,
+                               k_cap=kc, greedy=greedy)
+    return _topk_sample_kernel(logits, temperature, top_k, top_p, gumbel,
+                               k_cap=kc, greedy=greedy,
+                               interpret=auto_interpret(interpret))

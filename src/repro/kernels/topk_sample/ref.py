@@ -1,0 +1,70 @@
+"""Pure-jnp oracle for the fused top-k/top-p Gumbel sampler.
+
+This ref *defines* the op's semantics; the kernel is pinned against it
+exactly (vals, idx, and the sampled token).  It intentionally differs
+from ``serve/sampling.sample_tokens`` in one documented way: the
+nucleus (top-p) mass is measured inside the top-``k_cap`` candidate set
+(a renormalized softmax over k_cap values) rather than over the full
+vocabulary.  With k_cap=32 the truncated tail mass is negligible for
+real decode distributions, and the payoff is a sampler that never
+touches a (B, V) sort — one top-k extraction and (B, k_cap) arithmetic.
+
+Determinism contract shared with the kernel path:
+
+  * ``lax.top_k`` and the kernel's iterative max-extraction both break
+    value ties toward the lower vocab index, so vals/idx agree bitwise.
+  * the exclusive cumulative mass is a (k_cap, k_cap) strict-upper-
+    triangular matmul in f32 HIGHEST — the same primitive the kernel
+    lowers, so the nucleus keep-mask agrees bitwise (a parallel-prefix
+    ``cumsum`` could differ in the last ulp at the top-p boundary).
+  * the Gumbel noise is *passed in* (computed once in ops.py from
+    (seed, pos)), never re-derived per backend.
+
+temperature <= 0 is the greedy sentinel per row: the returned token is
+``argmax(logits)`` bitwise (rank-0 of a stable top-k).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def topk_sample_ref(logits, temperature=None, top_k=None, top_p=None,
+                    gumbel=None, *, k_cap: int = 32, greedy: bool = False):
+    """logits (B, V) -> (vals (B,k_cap) f32 desc, idx (B,k_cap) i32,
+    token (B,) i32).
+
+    ``greedy=True`` (static) skips the sampling math entirely: token is
+    the rank-0 index.  Otherwise temperature/top_k/top_p are (B,)
+    per-row knobs and ``gumbel`` is (B, k_cap) f32 noise applied by
+    candidate rank.
+    """
+    vals, idx = jax.lax.top_k(logits.astype(jnp.float32), k_cap)
+    # identity barrier, load-bearing on CPU: with the (B, k_cap)
+    # sampling arithmetic fused downstream, XLA's TopkRewriter no
+    # longer matches the sort+slice pattern and lax.top_k stays a full
+    # stable (B, V) sort — ~50x slower than the TopK custom call at
+    # V=4k.  Isolating the consumers restores the rewrite; numerics
+    # are unchanged.
+    vals, idx = jax.lax.optimization_barrier((vals, idx))
+    idx = idx.astype(jnp.int32)
+    if greedy:
+        return vals, idx, idx[:, 0]
+    safe_t = jnp.where(temperature > 0, temperature, 1.0)
+    svals = vals / safe_t.astype(jnp.float32)[:, None]
+    e = jnp.exp(svals - svals[:, :1])          # rank 0 is the row max
+    probs = e / e.sum(axis=1, keepdims=True)
+    rank = jnp.arange(k_cap, dtype=jnp.int32)
+    tri = (rank[:, None] < rank[None, :]).astype(jnp.float32)
+    excl = jax.lax.dot(probs, tri,
+                       precision=jax.lax.Precision.HIGHEST)  # mass before j
+    k_eff = jnp.where(top_k > 0, jnp.minimum(top_k, k_cap), k_cap)
+    keep = rank[None, :] < k_eff[:, None]
+    keep &= excl < top_p[:, None]
+    keep |= rank[None, :] == 0                 # rank 0 always sampleable
+    pick = jnp.argmax(jnp.where(keep, svals, NEG_INF) + gumbel, axis=1)
+    sampled = jnp.take_along_axis(idx, pick[:, None], axis=1)[:, 0]
+    token = jnp.where(temperature > 0, sampled, idx[:, 0])
+    return vals, idx, token.astype(jnp.int32)

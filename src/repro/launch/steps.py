@@ -28,7 +28,8 @@ def model_forward(model, cfg, params, batch):
     return model.apply(params, batch["tokens"])
 
 
-def make_loss_fn(model, cfg, loss_kind: str, *, vocab_chunk: int = 8192):
+def make_loss_fn(model, cfg, loss_kind: str, *, vocab_chunk: int = 8192,
+                 distill_kernel: bool = False):
     # the trailing ``rng`` opts into the Trainer's per-update key folding
     # (repro.train.strategies): today's forwards are deterministic so the
     # key is unused (and DCE'd), but any stochastic regularizer added to
@@ -40,9 +41,12 @@ def make_loss_fn(model, cfg, loss_kind: str, *, vocab_chunk: int = 8192):
         cap = cfg.logit_softcap
         mask = batch.get("mask")
         if loss_kind == "distill_topk":
+            # distill_kernel: Pallas sparse_ce inner loop (grad via its
+            # custom_vjp); default stays the streamed-XLA oracle
             loss = distill.chunked_topk_distill_ce(
                 h, w, batch["topk_vals"], batch["topk_idx"],
-                chunk=vocab_chunk, softcap=cap, mask=mask)
+                chunk=vocab_chunk, softcap=cap, mask=mask,
+                use_kernel=distill_kernel)
         else:
             loss = distill.chunked_ce(h, w, batch["labels"],
                                       chunk=vocab_chunk, softcap=cap,
@@ -71,7 +75,7 @@ def make_loss_fn(model, cfg, loss_kind: str, *, vocab_chunk: int = 8192):
 
 def make_train_step(model, cfg, *, loss_kind: str = "ce",
                     optimizer: str = "momentum", clip: float = 1.0,
-                    vocab_chunk: int = 8192):
+                    vocab_chunk: int = 8192, distill_kernel: bool = False):
     """-> train_step(params, opt_state, batch, lr).
 
     lr is a *traced* argument (not baked into the closure): an LR
@@ -79,7 +83,8 @@ def make_train_step(model, cfg, *, loss_kind: str = "ce",
     batch shape — tests/test_trainer.py pins the compile count.
     """
     from repro.train.strategies import make_sgd_step
-    loss_fn = make_loss_fn(model, cfg, loss_kind, vocab_chunk=vocab_chunk)
+    loss_fn = make_loss_fn(model, cfg, loss_kind, vocab_chunk=vocab_chunk,
+                           distill_kernel=distill_kernel)
     return make_sgd_step(loss_fn, optimizer=optimizer, clip=clip)
 
 
@@ -96,7 +101,8 @@ def make_prefill_step(model, cfg):
     return prefill_step
 
 
-def make_serve_step(model, cfg, *, greedy: bool = True):
+def make_serve_step(model, cfg, *, greedy: bool = True,
+                    use_kernel: bool = False):
     """One decode step: next-token + logits + updated cache.
 
     ``greedy=False`` returns a step taking an extra ``samp`` dict of
@@ -104,24 +110,45 @@ def make_serve_step(model, cfg, *, greedy: bool = True):
     ``seed``); rows with temperature <= 0 still take bitwise argmax.
     The sampling key is derived from the *pre-step* cache position so a
     request samples identically regardless of batch composition.
+
+    ``use_kernel=True`` routes next-token selection through the fused
+    ``kernels.topk_sample`` op (one top-k extraction + Gumbel-max over
+    a k_cap candidate set instead of a full-vocab argsort).  Greedy
+    tokens stay bitwise identical to ``jnp.argmax``; sampled tokens
+    follow the fused sampler's truncated-nucleus semantics (see
+    kernels/topk_sample/ref.py), so the fused path is an explicit
+    opt-in, never a silent swap.
     """
+    if use_kernel:
+        # serve/kernels packages import this module at import time;
+        # keep these edges lazy and one-directional
+        from repro.kernels.topk_sample import topk_sample
+
     if greedy:
         def serve_step(params, cache, tokens):
             logits, cache = model.decode_step(params, cache, tokens)
-            nxt = jnp.argmax(logits[:, -1],
-                             axis=-1).astype(jnp.int32)[:, None]
+            if use_kernel:
+                _, _, nxt = topk_sample(logits[:, -1], greedy=True)
+                nxt = nxt[:, None]
+            else:
+                nxt = jnp.argmax(logits[:, -1],
+                                 axis=-1).astype(jnp.int32)[:, None]
             return nxt, logits, cache
         return serve_step
 
-    # serve package imports this module at import time; import the
-    # sampler lazily to keep the edge one-directional
-    from repro.serve.sampling import sample_tokens
+    if not use_kernel:
+        from repro.serve.sampling import sample_tokens
 
     def serve_step_sample(params, cache, tokens, samp):
         pos = cache["pos"]
         logits, cache = model.decode_step(params, cache, tokens)
-        nxt = sample_tokens(logits[:, -1], samp["temperature"],
-                            samp["top_k"], samp["top_p"], samp["seed"],
-                            pos)[:, None]
-        return nxt, logits, cache
+        if use_kernel:
+            _, _, nxt = topk_sample(logits[:, -1], samp["temperature"],
+                                    samp["top_k"], samp["top_p"],
+                                    samp["seed"], pos)
+        else:
+            nxt = sample_tokens(logits[:, -1], samp["temperature"],
+                                samp["top_k"], samp["top_p"], samp["seed"],
+                                pos)
+        return nxt[:, None], logits, cache
     return serve_step_sample

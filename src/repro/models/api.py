@@ -27,18 +27,28 @@ from repro.models.transformer import Transformer
 from repro.models.whisper import Whisper
 
 
-def build_model(cfg: ModelConfig, *, paging=None):
+def build_model(cfg: ModelConfig, *, paging=None, decode_kernel=False):
     """``paging`` (a ``models.paging.PagedCacheConfig``) switches the
     decode cache of attention-family models to the paged pool layout;
-    training/prefill and the contiguous decode path are unaffected."""
+    training/prefill and the contiguous decode path are unaffected.
+
+    ``decode_kernel=True`` routes per-row decode attention through the
+    fused ``kernels/decode_attention`` op (decoder-only transformers;
+    scalar-pos lockstep decode and MLA keep the XLA path)."""
     if cfg.family == "lstm_am":
         if paging is not None:
             raise ValueError("the LSTM acoustic model has no KV cache "
                              "to page")
+        if decode_kernel:
+            raise ValueError("decode_kernel applies to KV-cache decode; "
+                             "the LSTM acoustic model has none")
         return LstmAM(cfg)
     if cfg.encoder is not None:
+        if decode_kernel:
+            raise ValueError("decode_kernel is not supported for "
+                             "encoder-decoder models yet")
         return Whisper(cfg, paging=paging)
-    return Transformer(cfg, paging=paging)
+    return Transformer(cfg, paging=paging, decode_kernel=decode_kernel)
 
 
 def supports_streaming(cfg: ModelConfig) -> bool:

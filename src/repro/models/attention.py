@@ -38,8 +38,12 @@ def init_attention(key, cfg, spec):
     return p
 
 
-def _project_qkv(params, cfg, x, positions):
-    """x (B,S,D) -> q (B,Hq,S,hd), k/v (B,Hkv,S,hd), rope applied."""
+def _project_qkv(params, cfg, x, positions, *, rope=True):
+    """x (B,S,D) -> q (B,Hq,S,hd), k/v (B,Hkv,S,hd), rope applied.
+
+    ``rope=False`` skips the rotation (the fused decode kernel applies
+    it inside the ``pallas_call`` instead — see ``kernels/decode_attention``).
+    """
     b, s, _ = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     q = x @ params["wq"].astype(x.dtype)
@@ -55,7 +59,7 @@ def _project_qkv(params, cfg, x, positions):
     if cfg.qk_norm:
         q = layers.rms_head_norm(params["q_norm"], q)
         k = layers.rms_head_norm(params["k_norm"], k)
-    if cfg.pos_emb == "rope":
+    if cfg.pos_emb == "rope" and rope:
         cos, sin = layers.rope_tables(positions, hd, cfg.rope_theta)
         q = layers.apply_rope(q, cos, sin)
         k = layers.apply_rope(k, cos, sin)
@@ -227,7 +231,31 @@ def row_update(cache_arr, new, slot, *, axis=2):
     return jnp.where(m, new, cache_arr)
 
 
-def attention_decode(params, cfg, spec, x, cache, pos, pages=None):
+def decode_slot_validity(pos, slots, *, window: int = 0):
+    """Validity mask over cache slots for single-token decode — THE mask
+    math shared by the XLA decode path, the MLA decode path, and the
+    fused kernel's ref oracle (``kernels/decode_attention/ref.py``), so
+    the implementations can't drift.
+
+    ``pos``: scalar or (B,) int32 position(s); ``slots``: cache slot
+    count.  ``window=0`` — linear layout: slot j holds position j, valid
+    iff ``j <= pos``.  ``window>0`` — SWA ring: slot j holds the latest
+    position ``p <= pos`` with ``p % slots == j``, valid iff that p is
+    in ``(pos - window, pos]`` and ``>= 0``.  Returns bool, shaped
+    (slots,) for scalar pos and (B, slots) for per-row pos.
+    """
+    idx = jnp.arange(slots)
+    posb = pos[..., None] if getattr(pos, "ndim", 0) else pos
+    if window:
+        # slot j holds position: the latest p <= pos, p % slots == j
+        kpos = posb - jax.lax.rem(posb - idx, slots)
+        kpos = jnp.where(kpos > posb, kpos - slots, kpos)  # safety
+        return (kpos >= 0) & (posb - kpos < window) & (kpos <= posb)
+    return idx <= posb
+
+
+def attention_decode(params, cfg, spec, x, cache, pos, pages=None,
+                     use_kernel=False):
     """One-token decode. x (B,1,D); pos int32: a scalar (all rows in
     lockstep — the legacy shape, kept bitwise) or (B,) per-row positions
     (continuous batching: each row writes and reads its cache at its own
@@ -238,7 +266,13 @@ def attention_decode(params, cfg, spec, x, cache, pos, pages=None):
     one-hot into the pool, and the read gathers the row's logical
     context back into the same (B, Hkv, S, hd) layout the contiguous
     masked-softmax tail consumes (masked columns contribute exact zeros,
-    keeping greedy decode token-identical — tests/test_paged_cache.py)."""
+    keeping greedy decode token-identical — tests/test_paged_cache.py).
+
+    ``use_kernel=True`` routes per-row decode through the fused
+    ``kernels/decode_attention`` op (RoPE + ring write + mask +
+    softmax·V in one pass: compiled Pallas on TPU, the fused-XLA ref
+    twin — bitwise-identical math — elsewhere).  Scalar-pos lockstep
+    decode keeps the XLA path below."""
     b = x.shape[0]
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     per_row = pos.ndim == 1 and pos.shape[0] == b
@@ -246,6 +280,9 @@ def attention_decode(params, cfg, spec, x, cache, pos, pages=None):
     if paged and (pages is None or not per_row):
         raise ValueError("paged attention cache requires per-row positions "
                          "and a PageRef (cache['pages'])")
+    if use_kernel and per_row:
+        return _attention_decode_fused(params, cfg, spec, x, cache, pos,
+                                       pages)
     q, k, v = _project_qkv(params, cfg, x,
                            pos[:, None, None] if per_row
                            else (pos[None] if pos.ndim == 0 else pos))
@@ -256,8 +293,7 @@ def attention_decode(params, cfg, spec, x, cache, pos, pages=None):
         gidx = paging_mod.gather_indices(pages)          # (B, max_ctx)
         ck = pool_k[gidx].transpose(0, 2, 1, 3)          # (B, Hkv, S, hd)
         cv = pool_v[gidx].transpose(0, 2, 1, 3)
-        slots = gidx.shape[1]
-        valid = jnp.arange(slots) <= pos[:, None]
+        valid = decode_slot_validity(pos, gidx.shape[1])
         new_cache = {"k": pool_k, "v": pool_v}
     else:
         slots = cache["k"].shape[2]
@@ -274,16 +310,9 @@ def attention_decode(params, cfg, spec, x, cache, pos, pages=None):
         # positions held by each cache slot (ring for swa, linear
         # otherwise); per-row, pos (B,1) broadcasts against idx (slots,)
         # -> (B, slots)
-        idx = jnp.arange(slots)
-        posb = pos[:, None] if per_row else pos
-        if spec.mixer == "swa" and spec.window and slots < 2**30:
-            # slot j holds position: the latest p <= pos, p % slots == j
-            kpos = posb - jax.lax.rem(posb - idx, slots)
-            kpos = jnp.where(kpos > posb, kpos - slots, kpos)  # safety
-            valid = (kpos >= 0) & (posb - kpos < spec.window) \
-                & (kpos <= posb)
-        else:
-            valid = idx <= posb
+        win = spec.window if (spec.mixer == "swa" and spec.window
+                              and slots < 2**30) else 0
+        valid = decode_slot_validity(pos, slots, window=win)
     scale = 1.0 / np.sqrt(hd)
     qg = q.reshape(b, hkv, hq // hkv, 1, hd)
     s_ = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
@@ -295,5 +324,48 @@ def attention_decode(params, cfg, spec, x, cache, pos, pages=None):
     p = jax.nn.softmax(s_, axis=-1)
     o = jnp.einsum("bhgqk,bhkd->bhgqd", p, cv.astype(jnp.float32))
     o = o.reshape(b, hq, 1, hd).transpose(0, 2, 1, 3).reshape(b, 1, hq * hd)
+    o = o.astype(x.dtype) @ params["wo"].astype(x.dtype)
+    return o, new_cache
+
+
+def _attention_decode_fused(params, cfg, spec, x, cache, pos, pages):
+    """Per-row decode through ``kernels/decode_attention``: projections
+    stay XLA (MXU matmuls fuse fine), the memory-bound tail — RoPE
+    rotation, one-hot ring write, slot-validity mask, softmax·V — runs
+    as one fused op instead of five materializing passes.
+
+    Paged dispatch: the pool write and block-table gather stay XLA
+    (gather indices are data, not schedule), RoPE is applied before the
+    pool write as on the XLA path, and the kernel fuses the mask +
+    softmax·V tail over the gathered view (``write=False``)."""
+    # local import: kernels/decode_attention/ref.py imports this module
+    # for the shared mask helper, so the edge must stay lazy here
+    from repro.kernels.decode_attention import decode_attention
+    b = x.shape[0]
+    hq, hd = cfg.n_heads, cfg.resolved_head_dim
+    paged = cache["k"].ndim == 3
+    theta = cfg.rope_theta if cfg.pos_emb == "rope" else 0.0
+    if paged:
+        q, k, v = _project_qkv(params, cfg, x, pos[:, None, None])
+        widx = paging_mod.write_index(pages, pos)
+        pool_k = paging_mod.pool_write(cache["k"], k[:, :, 0], widx)
+        pool_v = paging_mod.pool_write(cache["v"], v[:, :, 0], widx)
+        gidx = paging_mod.gather_indices(pages)          # (B, max_ctx)
+        ck = pool_k[gidx].transpose(0, 2, 1, 3)          # (B, Hkv, S, hd)
+        cv = pool_v[gidx].transpose(0, 2, 1, 3)
+        o, _, _ = decode_attention(q, k, v, ck, cv, pos,
+                                   softcap=cfg.attn_softcap, write=False)
+        new_cache = {"k": pool_k, "v": pool_v}
+    else:
+        q, k, v = _project_qkv(params, cfg, x, pos[:, None, None],
+                               rope=False)
+        slots = cache["k"].shape[2]
+        win = spec.window if (spec.mixer == "swa" and spec.window
+                              and slots < 2**30) else 0
+        o, ck, cv = decode_attention(q, k, v, cache["k"], cache["v"], pos,
+                                     window=win, softcap=cfg.attn_softcap,
+                                     rope_theta=theta)
+        new_cache = {"k": ck, "v": cv}
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, hq * hd)
     o = o.astype(x.dtype) @ params["wo"].astype(x.dtype)
     return o, new_cache

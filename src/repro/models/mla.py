@@ -155,12 +155,11 @@ def mla_decode(params, cfg, x, cache, pos, pages=None):
     s_rope = jnp.einsum("bhd,bsd->bhs", q_rope[:, :, 0].astype(jnp.float32),
                         kr.astype(jnp.float32))
     s_ = (s_nope + s_rope) * scale
+    valid = attn_mod.decode_slot_validity(pos, c.shape[1])
     if per_row:
-        valid = jnp.arange(c.shape[1])[None, :] <= pos[:, None]   # (B,S)
-        s_ = jnp.where(valid[:, None], s_, NEG_INF)
+        s_ = jnp.where(valid[:, None], s_, NEG_INF)       # (B,1,S)
     else:
-        valid = jnp.arange(c.shape[1]) <= pos
-        s_ = jnp.where(valid[None, None], s_, NEG_INF)
+        s_ = jnp.where(valid[None, None], s_, NEG_INF)    # (1,1,S)
     p = jax.nn.softmax(s_, axis=-1)
     # attention over latents, then decompress once per head
     o_c = jnp.einsum("bhs,bsr->bhr", p, c.astype(jnp.float32))  # (B,H,rank)

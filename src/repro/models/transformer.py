@@ -92,15 +92,20 @@ def init_block_cache(cfg, spec, batch, seq_len, dtype, paging=None):
     raise ValueError(spec.mixer)
 
 
-def block_decode(params, cfg, spec, x, cache, pos, pages=None):
+def block_decode(params, cfg, spec, x, cache, pos, pages=None,
+                 use_kernel=False):
     h = layers.norm_apply(params["norm1"], x, cfg.norm)
     if spec.mixer in ("attn", "swa"):
         if cfg.mla is not None:
+            # MLA decodes over the compressed latent cache — no fused
+            # kernel variant; it shares decode_slot_validity with the
+            # XLA path instead
             y, cache = mla.mla_decode(params["mixer"], cfg, h, cache, pos,
                                       pages=pages)
         else:
             y, cache = attn_mod.attention_decode(params["mixer"], cfg, spec,
-                                                 h, cache, pos, pages=pages)
+                                                 h, cache, pos, pages=pages,
+                                                 use_kernel=use_kernel)
     elif spec.mixer == "rglru":
         y, cache = recurrent.rglru_block_decode(params["mixer"], cfg, h,
                                                 cache)
@@ -126,9 +131,13 @@ def block_decode(params, cfg, spec, x, cache, pos, pages=None):
 # --------------------------------------------------------------- the model
 
 class Transformer:
-    def __init__(self, cfg, paging=None):
+    def __init__(self, cfg, paging=None, decode_kernel=False):
         self.cfg = cfg
         self.paging = paging        # PagedCacheConfig or None (contiguous)
+        # route per-row decode attention through kernels/decode_attention
+        # (fused RoPE + ring write + mask + softmax·V); scalar-pos
+        # lockstep decode and MLA keep the XLA path regardless
+        self.decode_kernel = decode_kernel
 
     # ---- init ----
     def init(self, key):
@@ -286,7 +295,8 @@ class Transformer:
                 new_gc = {}
                 for i, sp in enumerate(seg.pattern):
                     x, c = block_decode(gp[f"p{i}"], cfg, sp, x,
-                                        gc[f"p{i}"], pos, pages=pages)
+                                        gc[f"p{i}"], pos, pages=pages,
+                                        use_kernel=self.decode_kernel)
                     new_gc[f"p{i}"] = c
                 return x, new_gc
 

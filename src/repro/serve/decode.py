@@ -128,13 +128,22 @@ class TokenServer:
                  max_seq: int = 256, cache_dtype=jnp.bfloat16,
                  sync_every: Optional[int] = None,
                  eos_id: Optional[int] = None,
-                 paging=None, prefix_cache: bool = True):
+                 paging=None, prefix_cache: bool = True,
+                 decode_kernel: bool = False):
         if cfg.family == "lstm_am":
             raise ValueError("TokenServer is the token-LM decode surface; "
                              "acoustic models go through StreamingEngine")
         self.cfg = cfg
         self.paging = paging
-        self.model = build_model(cfg, paging=paging)
+        # decode_kernel: fused attention tail (kernels/decode_attention)
+        # + fused sampler (kernels/topk_sample) inside the jitted window.
+        # Greedy output stays bitwise identical; sampled requests follow
+        # the fused sampler's truncated-nucleus semantics (top_k must be
+        # 1..K_CAP_DEFAULT — enforced at submit), so it is a static
+        # opt-in per server, never a silent swap.
+        self.decode_kernel = decode_kernel
+        self.model = build_model(cfg, paging=paging,
+                                 decode_kernel=decode_kernel)
         self.params = params
         self.policy = policy
         # with paging the context bound is the page budget, not max_seq
@@ -193,7 +202,8 @@ class TokenServer:
         ``sample=True`` builds the variant taking per-row sampling knobs
         (a second jit; the greedy window stays bitwise-identical)."""
         serve_step = make_serve_step(self.model, self.cfg,
-                                     greedy=not sample)
+                                     greedy=not sample,
+                                     use_kernel=self.decode_kernel)
         k = self.sync_every
 
         def window(params, cache, tok, prompts, plens, samp=None):
@@ -227,6 +237,15 @@ class TokenServer:
                sampling: Optional[SamplingParams] = None) -> int:
         prompt = _validate_submit(prompt, max_new, self.max_seq,
                                   paging=self.paging)
+        if (self.decode_kernel and sampling is not None
+                and not sampling.greedy):
+            from repro.kernels.topk_sample import K_CAP_DEFAULT
+            if sampling.top_k <= 0 or sampling.top_k > K_CAP_DEFAULT:
+                raise ValueError(
+                    f"decode_kernel server samples within a "
+                    f"{K_CAP_DEFAULT}-candidate set (truncated-nucleus "
+                    f"semantics); top_k must be in 1..{K_CAP_DEFAULT}, "
+                    f"got {sampling.top_k}")
         req = TokenRequest(-1, prompt, max_new, sampling=sampling)
         req.rid = self.queue.submit(req)
         return req.rid

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import logit_store as ls
+from repro.kernels import _dispatch
 from repro.kernels.topk_logits import topk_logits
 from repro.launch import steps
 from repro.models import build_model
@@ -54,11 +55,10 @@ def make_topk_emitter(k: int, impl: str = "lax", *,
     impl="kernel" routes selection through the Pallas tile kernel
     (``kernels/topk_logits``); "lax" uses the logit-store codec.  Both
     produce the LogitStore wire format (max logit shifted to 0, bf16).
-    ``interpret=None`` auto-detects like ``kernels/gtc_compress``:
-    compiled on TPU, Pallas interpreter everywhere else.
+    ``interpret=None`` auto-detects via ``kernels._dispatch``: compiled
+    on TPU, Pallas interpreter everywhere else.
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = _dispatch.auto_interpret(interpret)
     if impl == "kernel":
         def emit(logits):
             vals, idx = topk_logits(logits, k, interpret=interpret)

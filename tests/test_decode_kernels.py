@@ -1,0 +1,297 @@
+"""Fused decode kernels (decode_attention, topk_sample) vs their
+oracles, and the fused serve/train integration surfaces.
+
+Parity tiers, pinned explicitly:
+  * kernel (interpret=True) vs ref — cache writes and top-k/sampled
+    tokens are exact; attention outputs carry fp32 reassociation noise
+    from the kernel's dot ordering, bounded at 1e-5.
+  * ref twin vs the production XLA decode path — **bitwise** (the twin
+    is built from the same primitives in the same order), which is what
+    lets the off-TPU fused server keep greedy output token-identical.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # [test] extra absent: deterministic shim
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs import get_arch, reduced
+from repro.core import distill
+from repro.kernels import (decode_attention, decode_attention_ref,
+                           topk_sample, topk_sample_ref)
+from repro.kernels.topk_sample import gumbel_rows
+from repro.models import attention as attn_mod
+from repro.models import build_model
+
+
+def _mk(shapes_seed, b=3, hq=4, hkv=2, s=16, hd=8, cache_dtype=jnp.bfloat16):
+    rng = np.random.default_rng(shapes_seed)
+    q = jnp.asarray(rng.normal(size=(b, hq, 1, hd)), jnp.float32)
+    kn = jnp.asarray(rng.normal(size=(b, hkv, 1, hd)), jnp.float32)
+    vn = jnp.asarray(rng.normal(size=(b, hkv, 1, hd)), jnp.float32)
+    ck = jnp.asarray(rng.normal(size=(b, hkv, s, hd)), cache_dtype)
+    cv = jnp.asarray(rng.normal(size=(b, hkv, s, hd)), cache_dtype)
+    return q, kn, vn, ck, cv
+
+
+# ------------------------------------------------------- decode_attention
+
+@pytest.mark.parametrize("kwargs", [
+    {},                                        # linear mask, no rope
+    {"rope_theta": 1e4},                       # fused rotation
+    {"window": 6},                             # SWA ring mask
+    {"rope_theta": 1e4, "window": 6},
+    {"softcap": 30.0},
+    {"write": False},                          # paged-gather variant
+])
+def test_decode_attention_kernel_vs_ref(kwargs):
+    q, kn, vn, ck, cv = _mk(0)
+    pos = jnp.asarray([3, 15, 0], jnp.int32)   # ragged, incl. edge rows
+    ro, rk, rv = decode_attention_ref(q, kn, vn, ck, cv, pos, **kwargs)
+    ko, kk, kv = decode_attention(q, kn, vn, ck, cv, pos,
+                                  use_kernel=True, interpret=True, **kwargs)
+    np.testing.assert_allclose(np.asarray(ro), np.asarray(ko), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(rk), np.asarray(kk))
+    np.testing.assert_array_equal(np.asarray(rv), np.asarray(kv))
+
+
+def test_decode_attention_ring_wraparound():
+    """SWA ring with pos far past the slot count: the kernel's iota mask
+    must reproduce decode_slot_validity's modular position recovery."""
+    q, kn, vn, ck, cv = _mk(1, s=8)
+    pos = jnp.asarray([20, 37, 8], jnp.int32)  # all wrapped
+    ro, rk, _ = decode_attention_ref(q, kn, vn, ck, cv, pos,
+                                     window=5, rope_theta=1e4)
+    ko, kk, _ = decode_attention(q, kn, vn, ck, cv, pos, window=5,
+                                 rope_theta=1e4, use_kernel=True,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(ro), np.asarray(ko), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(rk), np.asarray(kk))
+
+
+def test_decode_attention_lockstep_rows():
+    """Equal per-row positions == the scalar-pos lockstep schedule."""
+    q, kn, vn, ck, cv = _mk(2)
+    pos = jnp.full((3,), 7, jnp.int32)
+    ro, _, _ = decode_attention_ref(q, kn, vn, ck, cv, pos, rope_theta=1e4)
+    ko, _, _ = decode_attention(q, kn, vn, ck, cv, pos, rope_theta=1e4,
+                                use_kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(ro), np.asarray(ko), atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), window=st.integers(0, 10))
+def test_decode_attention_ragged_positions_property(seed, window):
+    """Any ragged position vector (0 .. 4*S): kernel matches ref on the
+    attention output and bitwise on the cache write."""
+    s = 8
+    q, kn, vn, ck, cv = _mk(seed, s=s)
+    rng = np.random.default_rng(seed)
+    hi = 4 * s if window else s   # linear layout never exceeds its slots
+    pos = jnp.asarray(rng.integers(0, hi, size=(3,)), jnp.int32)
+    kw = dict(window=window, rope_theta=1e4)
+    ro, rk, rv = decode_attention_ref(q, kn, vn, ck, cv, pos, **kw)
+    ko, kk, kv = decode_attention(q, kn, vn, ck, cv, pos,
+                                  use_kernel=True, interpret=True, **kw)
+    np.testing.assert_allclose(np.asarray(ro), np.asarray(ko), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(rk), np.asarray(kk))
+    np.testing.assert_array_equal(np.asarray(rv), np.asarray(kv))
+
+
+def test_attention_decode_fused_bitwise_off_tpu():
+    """attention_decode(use_kernel=True) off-TPU routes to the ref twin
+    and must be *bitwise* identical to the XLA path — output and cache."""
+    cfg = reduced(get_arch("qwen2.5-3b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    spec = cfg.segments[0].pattern[0]
+    ap = jax.tree_util.tree_map(lambda a: a[0], params["seg0"])["p0"]["mixer"]
+    rng = np.random.default_rng(7)
+    b, s = 4, 32
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    x = jnp.asarray(rng.normal(size=(b, 1, cfg.d_model)), jnp.float32)
+    cache = {"k": jnp.asarray(rng.normal(size=(b, hkv, s, hd)),
+                              jnp.bfloat16),
+             "v": jnp.asarray(rng.normal(size=(b, hkv, s, hd)),
+                              jnp.bfloat16)}
+    pos = jnp.asarray([3, 7, 2, 9], jnp.int32)
+    o0, c0 = attn_mod.attention_decode(ap, cfg, spec, x, cache, pos)
+    o1, c1 = attn_mod.attention_decode(ap, cfg, spec, x, cache, pos,
+                                       use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(o0), np.asarray(o1))
+    np.testing.assert_array_equal(np.asarray(c0["k"]), np.asarray(c1["k"]))
+    np.testing.assert_array_equal(np.asarray(c0["v"]), np.asarray(c1["v"]))
+
+
+def test_decode_slot_validity_shapes():
+    """Shared mask helper: scalar, per-row, and windowed-ring variants."""
+    v = attn_mod.decode_slot_validity(jnp.int32(3), 8)
+    np.testing.assert_array_equal(np.asarray(v),
+                                  np.arange(8) <= 3)
+    vb = attn_mod.decode_slot_validity(jnp.asarray([3, 5]), 8)
+    assert vb.shape == (2, 8)
+    # ring: slots=4, window=3, pos=6 -> slots hold positions 4,5,6,3;
+    # window keeps 4,5,6
+    vr = attn_mod.decode_slot_validity(jnp.asarray([6]), 4, window=3)
+    np.testing.assert_array_equal(np.asarray(vr)[0],
+                                  [True, True, True, False])
+
+
+# ----------------------------------------------------------- topk_sample
+
+def test_topk_sample_kernel_vs_ref_exact():
+    rng = np.random.default_rng(0)
+    b, v = 5, 300
+    lg = jnp.asarray(rng.normal(size=(b, v)) * 3, jnp.float32)
+    temp = jnp.asarray([0.8, 0.0, 1.3, 0.5, 1.0], jnp.float32)
+    topk = jnp.asarray([20, 0, 5, 50, 1], jnp.int32)
+    topp = jnp.asarray([0.95, 1.0, 0.5, 0.9, 1.0], jnp.float32)
+    seeds = jnp.asarray([1, 2, 3, 4, 5], jnp.int32)
+    pos = jnp.asarray([0, 9, 3, 7, 2], jnp.int32)
+    rv, ri, rt = topk_sample(lg, temp, topk, topp, seeds, pos,
+                             use_kernel=False)
+    kv, ki, kt = topk_sample(lg, temp, topk, topp, seeds, pos,
+                             use_kernel=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(rv), np.asarray(kv))
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(ki))
+    np.testing.assert_array_equal(np.asarray(rt), np.asarray(kt))
+    # vals/idx equal the stable full top-k
+    tv, ti = jax.lax.top_k(lg, 32)
+    np.testing.assert_array_equal(np.asarray(rv), np.asarray(tv))
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(ti))
+    # the temperature<=0 row is the greedy sentinel
+    assert int(rt[1]) == int(jnp.argmax(lg[1]))
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_topk_sample_greedy_bitwise_argmax(use_kernel):
+    rng = np.random.default_rng(1)
+    lg = jnp.asarray(rng.normal(size=(7, 130)), jnp.float32)
+    _, _, tok = topk_sample(lg, greedy=True, use_kernel=use_kernel,
+                            interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(tok), np.asarray(jnp.argmax(lg, -1).astype(jnp.int32)))
+
+
+def test_topk_sample_tiny_vocab():
+    """V < k_cap clamps the candidate set without crashing."""
+    rng = np.random.default_rng(2)
+    lg = jnp.asarray(rng.normal(size=(3, 10)), jnp.float32)
+    a = topk_sample(lg, greedy=True, use_kernel=False)
+    k = topk_sample(lg, greedy=True, use_kernel=True, interpret=True)
+    for x, y in zip(a, k):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_topk_sample_property_token_in_topk(seed):
+    """Sampled token always lies in the top-k_eff candidate prefix, and
+    kernel == ref exactly, over random knobs."""
+    rng = np.random.default_rng(seed)
+    b, v = 4, 200
+    lg = jnp.asarray(rng.normal(size=(b, v)) * 2, jnp.float32)
+    temp = jnp.asarray(rng.uniform(0.2, 1.5, b), jnp.float32)
+    topk = jnp.asarray(rng.integers(1, 33, b), jnp.int32)
+    topp = jnp.asarray(rng.uniform(0.3, 1.0, b), jnp.float32)
+    seeds = jnp.asarray(rng.integers(0, 1000, b), jnp.int32)
+    pos = jnp.asarray(rng.integers(0, 64, b), jnp.int32)
+    rv, ri, rt = topk_sample(lg, temp, topk, topp, seeds, pos,
+                             use_kernel=False)
+    _, _, kt = topk_sample(lg, temp, topk, topp, seeds, pos,
+                           use_kernel=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(rt), np.asarray(kt))
+    for r in range(b):
+        prefix = np.asarray(ri[r, :int(topk[r])])
+        assert int(rt[r]) in prefix
+
+
+def test_topk_sample_noise_composition_independent():
+    """A row's noise depends only on its (seed, pos) — never on which
+    other rows share the batch — so a request samples identically under
+    any continuous-batching slot assignment (the same reproducibility
+    contract as serve/sampling)."""
+    g = gumbel_rows(jnp.asarray([3, 9], jnp.int32),
+                    jnp.asarray([5, 11], jnp.int32), 32)
+    solo = gumbel_rows(jnp.asarray([9], jnp.int32),
+                       jnp.asarray([11], jnp.int32), 32)
+    np.testing.assert_array_equal(np.asarray(g[1]), np.asarray(solo[0]))
+    shuffled = gumbel_rows(jnp.asarray([7, 3], jnp.int32),
+                           jnp.asarray([0, 5], jnp.int32), 32)
+    np.testing.assert_array_equal(np.asarray(g[0]),
+                                  np.asarray(shuffled[1]))
+
+
+# ------------------------------------------------- sparse_ce distill path
+
+def test_distill_kernel_loss_and_grad_parity():
+    """chunked_topk_distill_ce(use_kernel=True) routes through the
+    Pallas sparse_ce op; value and gradients (via its custom_vjp) must
+    match the streamed-XLA oracle."""
+    rng = np.random.default_rng(0)
+    t, d, v, k = 24, 16, 260, 5
+    h = jnp.asarray(rng.normal(size=(1, t, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(d, v)) * 0.1, jnp.float32)
+    vals = jnp.asarray(rng.normal(size=(1, t, k)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, v, size=(1, t, k)), jnp.int32)
+    mask = jnp.asarray(rng.integers(0, 2, size=(1, t)), jnp.float32)
+    for cap, mk in [(0.0, None), (30.0, mask)]:
+        def xla(h, w):
+            return distill.chunked_topk_distill_ce(
+                h, w, vals, idx, chunk=64, softcap=cap, mask=mk)
+        def ker(h, w):
+            return distill.chunked_topk_distill_ce(
+                h, w, vals, idx, chunk=64, softcap=cap, mask=mk,
+                use_kernel=True, interpret=True)
+        l0, (gh0, gw0) = jax.value_and_grad(xla, (0, 1))(h, w)
+        l1, (gh1, gw1) = jax.value_and_grad(ker, (0, 1))(h, w)
+        np.testing.assert_allclose(float(l0), float(l1), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(gh0), np.asarray(gh1),
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(gw0), np.asarray(gw1),
+                                   atol=1e-6)
+
+
+# --------------------------------------------------- server integration
+
+def test_token_server_fused_greedy_parity():
+    """TokenServer(decode_kernel=True) emits bitwise-identical greedy
+    tokens off-TPU (ragged prompts, continuous batching)."""
+    from repro.serve.decode import TokenServer
+    cfg = reduced(get_arch("qwen2.5-3b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(3)
+    reqs = [(rng.integers(1, cfg.vocab_size,
+                          size=(int(rng.integers(3, 12)),)).astype(np.int32),
+             int(rng.integers(4, 9))) for _ in range(5)]
+
+    def run(decode_kernel):
+        srv = TokenServer(cfg, params, max_seq=64, sync_every=4,
+                          decode_kernel=decode_kernel)
+        for p, mn in reqs:
+            srv.submit(p, max_new=mn)
+        return {rid: list(r.out) for rid, r in srv.drain().items()}
+
+    assert run(False) == run(True)
+
+
+def test_token_server_fused_rejects_uncappable_topk():
+    from repro.serve.decode import TokenServer
+    from repro.serve.sampling import SamplingParams
+    cfg = reduced(get_arch("qwen2.5-3b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(1))
+    srv = TokenServer(cfg, params, max_seq=64, decode_kernel=True)
+    prompt = np.asarray([1, 2, 3], np.int32)
+    for bad in (0, 33):
+        with pytest.raises(ValueError, match="top_k"):
+            srv.submit(prompt, max_new=4,
+                       sampling=SamplingParams(temperature=1.0, top_k=bad))
+    # greedy and cappable sampled requests are accepted
+    srv.submit(prompt, max_new=4)
+    srv.submit(prompt, max_new=4,
+               sampling=SamplingParams(temperature=1.0, top_k=20))
