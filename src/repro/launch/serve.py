@@ -1,11 +1,11 @@
-"""Online serving entrypoint: the unified engine under a latency policy.
+"""Online serving entrypoint: both session types of the slot core.
 
-All decode machinery lives in ``repro.serve`` — this module is the CLI.
-Token LMs go through ``serve.TokenServer`` (slot-based continuous
-batching over the per-row cache surface: ragged prefill, mid-flight
-admit/retire, one host sync per decode window); the acoustic model goes
-through ``serve.StreamingEngine``'s slot-based streaming path (chunked
-audio with carried LSTM state, double-buffered feed).
+All serving machinery lives in ``repro.serve`` — this module is the
+CLI.  Token LMs go through ``serve.TokenServer``, streaming-capable
+AMs through ``serve.StreamServer``: both are session types over the
+same slot-based core (``serve.slots.SlotServer`` — mid-flight
+admission, one host sync per window, SLO tiers).  Bidirectional AMs
+have no streaming form and use ``StreamingEngine``'s batched path.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b
   PYTHONPATH=src python -m repro.launch.serve --arch lstm-am-7khr
@@ -21,7 +21,8 @@ import numpy as np
 from repro.configs import get_arch, reduced
 from repro.models import build_model
 from repro.models.api import supports_streaming
-from repro.serve import LATENCY, BatchPolicy, StreamingEngine, TokenServer
+from repro.serve import (LATENCY, SLO_DEFAULT, BatchPolicy,
+                         StreamingEngine, StreamServer, TokenServer)
 
 
 def serve_tokens(cfg, params, *, n_requests: int = 6, max_new: int = 8,
@@ -63,43 +64,36 @@ def serve_batch(cfg, params, *, n_requests: int = 6,
 
 
 def serve_stream(cfg, params, *, n_streams: int = 3, chunk: int = 16,
-                 policy: BatchPolicy = LATENCY, seed: int = 0):
-    """Streaming AM serving: concurrent audio streams, chunked frames,
-    top-k senone posteriors per frame."""
-    eng = StreamingEngine(cfg, params, k=10, policy=policy,
-                          n_slots=n_streams)
+                 seed: int = 0):
+    """Streaming AM serving on the slot core: long firehose streams
+    plus interactive arrivals under SLO tiers, top-k senone posteriors
+    per frame, one host sync per window."""
+    srv = StreamServer(cfg, params, n_slots=n_streams, chunk_frames=chunk,
+                       k=10, tiers=SLO_DEFAULT)
     rng = np.random.default_rng(seed)
-    utts = [rng.normal(size=(int(rng.integers(2, 5)) * chunk, cfg.feat_dim)
-                       ).astype(np.float32) for _ in range(n_streams)]
-    sids = [eng.open_stream() for _ in range(n_streams)]
-    got = {s: 0 for s in sids}
-
-    def chunk_iter():
-        # stage the next chunk while the current step computes: the
-        # pipelined driver keeps one feed in flight (double buffering)
-        sent = {s: 0 for s in sids}
-        while True:
-            chunks = {s: u[sent[s]:sent[s] + chunk]
-                      for s, u in zip(sids, utts) if sent[s] < u.shape[0]}
-            if not chunks:
-                return
-            for s, c in chunks.items():
-                sent[s] += c.shape[0]
-            yield chunks
-
+    fire = [rng.normal(size=(int(rng.integers(8, 14)) * chunk,
+                             cfg.feat_dim)).astype(np.float32)
+            for _ in range(n_streams)]
+    inter = [rng.normal(size=(chunk, cfg.feat_dim)).astype(np.float32)
+             for _ in range(2)]
     t0 = time.time()
-    step = 0
-    for out in eng.feed_pipelined(chunk_iter(), depth=2):
-        for s, (vals, _) in out.items():
-            got[s] += vals.shape[0]
-        step += 1
+    rids = [srv.submit(u, tier="firehose") for u in fire]
+    done = srv.pump()                  # firehose saturates the slots ...
+    rids += [srv.submit(u, tier="interactive") for u in inter]
+    done.update(srv.drain())           # ... interactive preempts it
     dt = time.time() - t0
-    frames = sum(u.shape[0] for u in utts)
-    print(f"[serve] {n_streams} streams, {frames} frames in {step} "
-          f"batched steps, {dt:.2f}s ({frames / dt:.0f} frames/s)")
-    for s in sids:
-        eng.close_stream(s)
-    return got
+    frames = sum(u.shape[0] for u in fire + inter)
+    st = srv.stats
+    print(f"[serve] {len(rids)} streams ({len(inter)} interactive), "
+          f"{frames} frames in {dt:.2f}s ({frames / dt:.0f} frames/s; "
+          f"{st['syncs']} host syncs over {st['steps']} steps, "
+          f"{st['parked']} parks, utilization {srv.utilization():.0%})")
+    for r in rids:
+        v, _ = done[r].emissions()
+        print(f"  stream {r} ({done[r].tier or 'default'}): "
+              f"{v.shape[0]} emissions, finished sync "
+              f"{done[r].finished_sync}")
+    return done
 
 
 def main(argv=None):

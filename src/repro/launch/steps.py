@@ -102,7 +102,7 @@ def make_prefill_step(model, cfg):
 
 
 def make_serve_step(model, cfg, *, greedy: bool = True,
-                    use_kernel: bool = False):
+                    use_kernel: bool = False, wide_fallback: bool = False):
     """One decode step: next-token + logits + updated cache.
 
     ``greedy=False`` returns a step taking an extra ``samp`` dict of
@@ -118,11 +118,18 @@ def make_serve_step(model, cfg, *, greedy: bool = True,
     follow the fused sampler's truncated-nucleus semantics (see
     kernels/topk_sample/ref.py), so the fused path is an explicit
     opt-in, never a silent swap.
+
+    ``wide_fallback=True`` (fused-sampling only) builds the *mixed*
+    step: rows whose ``top_k`` the k_cap candidate set can't honor
+    (``top_k <= 0`` — full vocab — or ``top_k > k_cap``) take the
+    full-vocab argsort sampler, bitwise what the non-kernel server
+    draws; every other row keeps the fused path.  The server picks this
+    step only for windows that actually hold a wide row.
     """
     if use_kernel:
         # serve/kernels packages import this module at import time;
         # keep these edges lazy and one-directional
-        from repro.kernels.topk_sample import topk_sample
+        from repro.kernels.topk_sample import K_CAP_DEFAULT, topk_sample
 
     if greedy:
         def serve_step(params, cache, tokens):
@@ -136,7 +143,7 @@ def make_serve_step(model, cfg, *, greedy: bool = True,
             return nxt, logits, cache
         return serve_step
 
-    if not use_kernel:
+    if not use_kernel or wide_fallback:
         from repro.serve.sampling import sample_tokens
 
     def serve_step_sample(params, cache, tokens, samp):
@@ -146,6 +153,13 @@ def make_serve_step(model, cfg, *, greedy: bool = True,
             _, _, nxt = topk_sample(logits[:, -1], samp["temperature"],
                                     samp["top_k"], samp["top_p"],
                                     samp["seed"], pos)
+            if wide_fallback:
+                wide_nxt = sample_tokens(logits[:, -1], samp["temperature"],
+                                         samp["top_k"], samp["top_p"],
+                                         samp["seed"], pos)
+                wide = ((samp["top_k"] <= 0)
+                        | (samp["top_k"] > K_CAP_DEFAULT))
+                nxt = jnp.where(wide, wide_nxt, nxt)
         else:
             nxt = sample_tokens(logits[:, -1], samp["temperature"],
                                 samp["top_k"], samp["top_p"], samp["seed"],

@@ -53,9 +53,29 @@ def build_model(cfg: ModelConfig, *, paging=None, decode_kernel=False):
 
 def supports_streaming(cfg: ModelConfig) -> bool:
     """True iff build_model(cfg) exposes the streaming surface
-    (init_stream_state / stream_step): causal frame-synchronous models."""
-    from repro.models.lstm_am import is_bidirectional
-    return cfg.family == "lstm_am" and not is_bidirectional(cfg)
+    (init_stream_state / stream_step / reset_stream_rows): causal
+    frame-synchronous AMs, and enc-dec (whisper) via the chunked
+    encoder + incremental decoder."""
+    if cfg.family == "lstm_am":
+        from repro.models.lstm_am import is_bidirectional
+        return not is_bidirectional(cfg)
+    return cfg.encoder is not None
+
+
+def stream_frame_sync(cfg: ModelConfig) -> bool:
+    """True when ``stream_step`` emits one output position per input
+    frame (frame-synchronous AM: per-frame senone posteriors); False
+    when it emits one decode position per chunk (whisper's incremental
+    decoder).  The serving layer uses this to slice emissions and count
+    useful work."""
+    return cfg.family == "lstm_am"
+
+
+def stream_feat_dim(cfg: ModelConfig) -> int:
+    """Per-frame feature width a streaming chunk row must carry: log-mel
+    stack width for the AM, encoder embedding width (the stubbed conv
+    frontend's output) for whisper."""
+    return cfg.feat_dim if cfg.family == "lstm_am" else cfg.d_model
 
 
 def _sds(shape, dtype):

@@ -93,8 +93,11 @@ class LstmAM:
     # the per-layer (h, c) pytree across calls.  Feeding an utterance in
     # chunks is exactly equivalent to one full-utterance apply().
 
-    def init_stream_state(self, batch, dtype=jnp.float32):
-        """Fresh per-stream recurrent state (batch = concurrent streams)."""
+    def init_stream_state(self, batch, dtype=jnp.float32, **_sizing):
+        """Fresh per-stream recurrent state (batch = concurrent streams).
+        Sizing kwargs (``max_frames``/``max_tokens``) are accepted for
+        surface uniformity with the whisper streaming state and ignored:
+        LSTM state is O(1) per stream."""
         if self.bidirectional:
             raise ValueError(
                 "bidirectional AM has no streaming form; use the batched "
@@ -110,3 +113,22 @@ class LstmAM:
         """
         h, aux = self.apply(params, feats, state=state, lens=lens)
         return h, aux["state"]
+
+    def reset_stream_rows(self, state, rows):
+        """Zero the (h, c) rows selected by the (B,) bool mask — slot
+        admission for the stream surface (the ``reset_cache_rows``
+        convention of the decode caches, applied to recurrent state)."""
+        return jax.tree_util.tree_map(
+            lambda a: jnp.where(rows[:, None], jnp.zeros((), a.dtype), a),
+            state)
+
+    def pull_stream_row(self, state, i):
+        """Extract stream ``i``'s state row (detach: the serving layer
+        parks it host-side).  Round-trips bitwise through
+        ``put_stream_row``."""
+        return jax.tree_util.tree_map(lambda a: a[i], state)
+
+    def put_stream_row(self, state, i, row):
+        """Write a previously pulled state row back into slot ``i``."""
+        return jax.tree_util.tree_map(
+            lambda a, r: a.at[i].set(jnp.asarray(r, a.dtype)), state, row)

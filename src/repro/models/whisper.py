@@ -229,6 +229,13 @@ class Whisper:
         return cache
 
     def decode_step(self, params, cache, tokens):
+        x, new_cache = self._decode_hidden(params, cache, tokens)
+        return self.unembed(params, x), new_cache
+
+    def _decode_hidden(self, params, cache, tokens):
+        """One cached decode step, returning the final-norm *hidden*
+        (B, 1, D) — the streaming surface emits top-k over it; the
+        token surface (``decode_step``) unembeds it."""
         cfg = self.cfg
         pos = cache["pos"]
         b = tokens.shape[0]
@@ -240,6 +247,16 @@ class Whisper:
             from repro.models.paging import PageRef
             pages = PageRef(cache["pages"]["tables"], cache["pages"]["caps"],
                             self.paging.page_size)
+        # cross-attention validity: the streaming state carries
+        # ``enc_len`` — frames written so far per row — and masks the
+        # unwritten tail of the K/V buffers.  Absent (the batch decode
+        # path, whose ck/cv are always full), scores are untouched:
+        # bitwise what this step always computed.
+        xbias = None
+        if "enc_len" in cache:
+            s_enc = cache["ck"].shape[3]
+            xvalid = jnp.arange(s_enc)[None, :] < cache["enc_len"][:, None]
+            xbias = jnp.where(xvalid, 0.0, NEG_INF)[:, None, None, :]
 
         def body(carry, xs):
             x = carry
@@ -251,12 +268,14 @@ class Whisper:
                                                 pages=pages)
             x = x + y
             hx = layers.norm_apply(bp["norm_x"], x, cfg.norm)
-            # cross attention over cached encoder K/V (all positions valid)
+            # cross attention over cached encoder K/V
             hq = (hx @ bp["cross"]["wq"].astype(hx.dtype)).reshape(
                 b, 1, cfg.n_heads, cfg.resolved_head_dim).transpose(0, 2, 1, 3)
             s_ = jnp.einsum("bhqd,bhkd->bhqk", hq.astype(jnp.float32),
                             ck_l.astype(jnp.float32))
             s_ = s_ / np.sqrt(cfg.resolved_head_dim)
+            if xbias is not None:
+                s_ = s_ + xbias
             p = jax.nn.softmax(s_, axis=-1)
             o = jnp.einsum("bhqk,bhkd->bhqd", p, cv_l.astype(jnp.float32))
             o = o.astype(x.dtype).transpose(0, 2, 1, 3).reshape(b, 1, -1)
@@ -279,8 +298,8 @@ class Whisper:
             x, (nk, nv) = jax.lax.scan(body, x, xs_all)
         new_cache = dict(cache)
         new_cache.update({"pos": pos + 1, "k": nk, "v": nv})
-        x = layers.norm_apply(params["final_norm"], x, cfg.norm)
-        return self.unembed(params, x), new_cache
+        return layers.norm_apply(params["final_norm"], x, cfg.norm), \
+            new_cache
 
     def reset_cache_rows(self, cache, rows, starts=None):
         """Zero the self-attention KV rows selected by the (B,) bool mask
@@ -300,3 +319,149 @@ class Whisper:
             new[key] = jnp.where(m, jnp.zeros((), cache[key].dtype),
                                  cache[key])
         return new
+
+    # ------------------------------------------------- streaming surface
+    # Chunked online inference (serve.StreamServer / StreamingEngine
+    # feed): audio arrives as encoder-embedding chunks.  Each chunk is
+    # encoded *chunk-locally* — bidirectional attention within the chunk
+    # at the stream's running frame offset, a streaming approximation of
+    # the full-utterance encoder — its cross-attention K/V are scattered
+    # into the stream's row at that offset, and ONE incremental decoder
+    # step runs per chunk over all audio heard so far, feeding back its
+    # own greedy token.  Everything is per-row: ragged chunks batch
+    # safely (lens masks encoder validity and the K/V scatter), dead
+    # rows (lens == 0) are reverted wholesale, and a row's outputs are
+    # independent of batch composition.  Unlike the LSTM AM, chunked
+    # streaming is NOT equivalent to full-utterance apply() — encoder
+    # context is chunk-local and token feedback is greedy — but it is
+    # deterministic, and the slot-based server matches the lockstep
+    # feed loop bitwise (pinned in tests/test_stream_server.py).
+
+    def init_stream_state(self, batch, dtype=jnp.float32, *,
+                          max_frames: int = 256, max_tokens: int = 64):
+        """Per-stream streaming state: decoder self-attn cache rows
+        (``max_tokens`` — one decoder token per chunk fed), growing
+        cross-attn K/V buffers (``max_frames`` audio frames), the
+        frames-written watermark (``enc_len``, doubling as the
+        cross-attention validity bound) and the fed-back token."""
+        if self.paging is not None:
+            raise ValueError("streaming whisper uses contiguous per-row "
+                             "caches; build the model without paging")
+        cfg = self.cfg
+        h, hkv = cfg.n_heads, cfg.n_kv_heads
+        hd, n = cfg.resolved_head_dim, cfg.n_layers
+        return {
+            "pos": jnp.zeros((batch,), jnp.int32),     # decoder tokens fed
+            "k": jnp.zeros((n, batch, hkv, max_tokens, hd), dtype),
+            "v": jnp.zeros((n, batch, hkv, max_tokens, hd), dtype),
+            "ck": jnp.zeros((n, batch, h, max_frames, hd), dtype),
+            "cv": jnp.zeros((n, batch, h, max_frames, hd), dtype),
+            "enc_len": jnp.zeros((batch,), jnp.int32),  # frames written
+            "tok": jnp.zeros((batch, 1), jnp.int32),    # next decoder input
+        }
+
+    def stream_step(self, params, state, feats, *, lens=None):
+        """One streaming chunk: feats (B,t,D) encoder embeddings ->
+        (hidden (B,1,D), state).  One output position per chunk — the
+        incremental decoder's next-token hidden, not per-frame senones
+        (``models.api.stream_frame_sync``)."""
+        cfg = self.cfg
+        b, t, _ = feats.shape
+        if lens is None:
+            lens = jnp.full((b,), t, jnp.int32)
+        lens = lens.astype(jnp.int32)
+        alive = lens > 0
+        hd = cfg.resolved_head_dim
+        # ---- chunk-local encoder at per-row frame offsets
+        pos_rows = state["enc_len"][:, None] + jnp.arange(t)     # (B,t)
+        x = feats + params["enc_pos"].astype(feats.dtype)[
+            jnp.clip(pos_rows, 0, MAX_POS - 1)]
+        valid = jnp.arange(t)[None, :] < lens[:, None]           # (B,t)
+        bias = jnp.where(valid, 0.0, NEG_INF)[:, None, None, None, :]
+
+        def enc_body(carry, bp):
+            h = layers.norm_apply(bp["norm1"], carry, cfg.norm)
+            q, k, v = attn_mod._project_qkv(bp["mixer"], cfg, h,
+                                            jnp.arange(t))
+            qg = attn_mod._group(q, cfg.n_kv_heads)    # (B,hkv,g,t,hd)
+            s_ = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                            k.astype(jnp.float32)) / np.sqrt(hd)
+            p = jax.nn.softmax(s_ + bias, axis=-1)
+            o = jnp.einsum("bhgqk,bhkd->bhgqd", p,
+                           v.astype(jnp.float32)).astype(carry.dtype)
+            o = o.reshape(b, cfg.n_heads, t, hd)
+            o = o.transpose(0, 2, 1, 3).reshape(b, t, -1)
+            x = carry + o @ bp["mixer"]["wo"].astype(h.dtype)
+            h2 = layers.norm_apply(bp["norm2"], x, cfg.norm)
+            x = x + layers.mlp_apply(bp["ffn"], h2, cfg.act)
+            return x, None
+
+        enc = _maybe_scan(cfg, enc_body, x, params["enc_blocks"])
+        enc = layers.norm_apply(params["enc_norm"], enc, cfg.norm)
+        # ---- scatter the chunk's cross-attn K/V at the row offsets;
+        # target positions are fresh (zeros), so add == write, and the
+        # validity mask keeps padded frames out of the buffers
+        s_max = state["ck"].shape[3]
+        onehot = ((pos_rows[:, :, None] == jnp.arange(s_max)[None, None, :])
+                  & valid[:, :, None]).astype(state["ck"].dtype)  # (B,t,S)
+
+        def per_layer(bp):
+            return _xattn_kv(bp["cross"], cfg, enc)    # (B,h,t,hd) x2
+
+        ck_c, cv_c = jax.vmap(per_layer)(params["dec_blocks"])
+        ck = state["ck"] + jnp.einsum(
+            "bts,nbhtd->nbhsd", onehot, ck_c.astype(state["ck"].dtype))
+        cv = state["cv"] + jnp.einsum(
+            "bts,nbhtd->nbhsd", onehot, cv_c.astype(state["cv"].dtype))
+        enc_len = state["enc_len"] + lens
+        # ---- one incremental decoder step over the audio heard so far
+        cache = {"pos": state["pos"], "k": state["k"], "v": state["v"],
+                 "ck": ck, "cv": cv, "enc_len": enc_len}
+        hidden, new_cache = self._decode_hidden(params, cache,
+                                                state["tok"])
+        nxt = jnp.argmax(self.unembed(params, hidden)[:, -1],
+                         axis=-1).astype(jnp.int32)[:, None]
+        # ---- dead rows (lens == 0) must not advance: revert wholesale
+        m5 = alive[None, :, None, None, None]
+        state = {
+            "pos": jnp.where(alive, new_cache["pos"], state["pos"]),
+            "k": jnp.where(m5, new_cache["k"], state["k"]),
+            "v": jnp.where(m5, new_cache["v"], state["v"]),
+            "ck": jnp.where(m5, ck, state["ck"]),
+            "cv": jnp.where(m5, cv, state["cv"]),
+            "enc_len": jnp.where(alive, enc_len, state["enc_len"]),
+            "tok": jnp.where(alive[:, None], nxt, state["tok"]),
+        }
+        return hidden, state
+
+    def reset_stream_rows(self, state, rows):
+        """Zero the streaming-state rows selected by the (B,) bool mask —
+        slot admission for the stream surface, the ``reset_cache_rows``
+        convention applied to the full streaming pytree."""
+        m5 = rows[None, :, None, None, None]
+        new = {"pos": jnp.where(rows, 0, state["pos"]),
+               "enc_len": jnp.where(rows, 0, state["enc_len"]),
+               "tok": jnp.where(rows[:, None], 0, state["tok"])}
+        for key in ("k", "v", "ck", "cv"):
+            new[key] = jnp.where(m5, jnp.zeros((), state[key].dtype),
+                                 state[key])
+        return new
+
+    # stream-state batch axis per key: caches carry layers on axis 0
+    _STREAM_ROW_AXIS = {"pos": 0, "enc_len": 0, "tok": 0,
+                        "k": 1, "v": 1, "ck": 1, "cv": 1}
+
+    def pull_stream_row(self, state, i):
+        """Extract stream ``i``'s slice of every state buffer (detach:
+        the serving layer parks it host-side).  Round-trips bitwise
+        through ``put_stream_row``."""
+        return {key: jnp.take(a, i, axis=self._STREAM_ROW_AXIS[key])
+                for key, a in state.items()}
+
+    def put_stream_row(self, state, i, row):
+        """Write a previously pulled state row back into slot ``i``."""
+        out = {}
+        for key, a in state.items():
+            idx = (slice(None),) * self._STREAM_ROW_AXIS[key] + (i,)
+            out[key] = a.at[idx].set(jnp.asarray(row[key], a.dtype))
+        return out

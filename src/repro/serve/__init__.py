@@ -2,24 +2,35 @@
 teacher target generation and online serving are the same workload under
 different batching policies).
 
-  StreamingEngine — bucketed batch inference + per-stream chunked
-      streaming with carried LSTM state and a double-buffered feed,
-      top-k logit emission.
-  TokenServer — slot-based continuous batcher for the token-LM serving
-      surface (per-row cache positions, mid-flight admit/retire,
-      chunked emission sync; launch/serve.py, examples/serve_lm.py).
+Both serving surfaces are session types over ONE slot-based core
+(``SlotServer`` in serve/slots.py: slot admit/retire, mid-flight
+admission, device-side emission windows with one host sync per
+``sync_every`` steps, failure recovery, honest utilization stats):
+
+  TokenServer — token-LM sessions: per-row cache positions, ragged
+      prefill, EOS retirement (launch/serve.py, examples/serve_lm.py).
       With ``paging=PagedCacheConfig(...)`` the KV cache is a shared
       page pool with prefix caching (serve/paging.PageAllocator);
       ``submit(..., sampling=SamplingParams(...))`` enables per-request
       temperature / top-k / top-p sampling.
-  RoundTokenServer — the legacy generation-round engine (lockstep
-      baseline for parity tests and benchmarks).
+  StreamServer — streaming-AM sessions: long-running audio streams
+      with per-row recurrent state, ragged chunk consumption, and
+      mid-flight detach/reattach (bitwise state round-trip).
+  SLOTier / TieredPolicy / INTERACTIVE / FIREHOSE — SLO tiers with
+      per-tier sync_every / max_batch and admission control that sheds
+      or parks firehose streams under interactive pressure.
+
+Lockstep baselines (parity tests and benchmarks):
+  StreamingEngine — bucketed batch inference + per-stream chunked
+      streaming with carried state and a double-buffered feed.
+  RoundTokenServer — the legacy generation-round engine.
   BatchPolicy / THROUGHPUT / LATENCY — batch-formation policies.
 """
 from repro.models.paging import PagedCacheConfig
-from repro.serve.batcher import (LATENCY, THROUGHPUT, BatchPolicy,
-                                 FormedBatch, bucket_length, form_batches,
-                                 padding_efficiency)
+from repro.serve.batcher import (FIREHOSE, INTERACTIVE, LATENCY, SLO_DEFAULT,
+                                 THROUGHPUT, BatchPolicy, FormedBatch,
+                                 SLOTier, TieredPolicy, bucket_length,
+                                 form_batches, padding_efficiency)
 from repro.serve.decode import RoundTokenServer, TokenRequest, TokenServer
 from repro.serve.engine import (StreamingEngine, StreamFeed,
                                 make_topk_emitter)
@@ -27,10 +38,14 @@ from repro.serve.paging import PageAllocator, block_hashes
 from repro.serve.request import (CompletedRequest, InferenceRequest,
                                  RequestQueue)
 from repro.serve.sampling import GREEDY, SamplingParams
+from repro.serve.slots import SlotServer
+from repro.serve.stream import StreamServer, StreamSession
 
 __all__ = [
     "BatchPolicy", "THROUGHPUT", "LATENCY", "FormedBatch", "bucket_length",
-    "form_batches", "padding_efficiency", "StreamingEngine", "StreamFeed",
+    "form_batches", "padding_efficiency", "SLOTier", "TieredPolicy",
+    "SLO_DEFAULT", "INTERACTIVE", "FIREHOSE", "SlotServer",
+    "StreamingEngine", "StreamFeed", "StreamServer", "StreamSession",
     "make_topk_emitter", "TokenServer", "RoundTokenServer", "TokenRequest",
     "InferenceRequest", "CompletedRequest", "RequestQueue",
     "PagedCacheConfig", "PageAllocator", "block_hashes",

@@ -20,7 +20,7 @@ than the queue already holds, for online serving.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -51,6 +51,70 @@ THROUGHPUT = BatchPolicy("throughput", max_batch=16, bucket_multiple=64,
                          sort_by_length=True, sync_every=16)
 LATENCY = BatchPolicy("latency", max_batch=4, bucket_multiple=16,
                       sort_by_length=False, sync_every=4)
+
+
+@dataclass(frozen=True)
+class SLOTier:
+    """One service tier of the slot-based session core.
+
+    name: the tier id sessions carry (``payload.tier``).
+    sync_every: this tier's decode-window length.  The core runs the
+        *tightest* window among active tiers — one interactive session
+        shortens the window for everyone, keeping its emission latency
+        bounded; a firehose-only batch runs long windows that amortize
+        host syncs.
+    max_batch: cap on slots this tier may hold concurrently (None = up
+        to the whole server) — the per-tier analogue of
+        ``BatchPolicy.max_batch``.
+    preemptible: under interactive pressure this tier's sessions are
+        shed (admission deferred) or parked (detached mid-flight, state
+        pulled to host, slot re-admitted to waiting work).
+    """
+    name: str
+    sync_every: int = 8
+    max_batch: Optional[int] = None
+    preemptible: bool = False
+
+
+INTERACTIVE = SLOTier("interactive", sync_every=2, preemptible=False)
+FIREHOSE = SLOTier("firehose", sync_every=16, preemptible=True)
+
+
+@dataclass(frozen=True)
+class TieredPolicy:
+    """SLO-aware admission policy over a set of tiers.
+
+    shed_threshold: once non-preemptible (interactive) sessions occupy
+        this fraction of slots, preemptible (firehose) admissions stop
+        — queued firehose sessions stay pending ("shed"), and
+        ``SlotServer._rebalance`` parks active ones when interactive
+        sessions are waiting with no free slot.
+    """
+    tiers: Tuple[SLOTier, ...] = (INTERACTIVE, FIREHOSE)
+    shed_threshold: float = 0.75
+
+    def __post_init__(self):
+        if not self.tiers:
+            raise ValueError("need at least one tier")
+        if not 0.0 < self.shed_threshold <= 1.0:
+            raise ValueError("shed_threshold must be in (0, 1]")
+        names = [t.name for t in self.tiers]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tier names in {names}")
+
+    def tier(self, name: Optional[str]) -> SLOTier:
+        """Look up a tier; None (untagged session) maps to the first
+        (default) tier."""
+        if name is None:
+            return self.tiers[0]
+        for t in self.tiers:
+            if t.name == name:
+                return t
+        raise KeyError(f"unknown tier {name!r}; have "
+                       f"{[t.name for t in self.tiers]}")
+
+
+SLO_DEFAULT = TieredPolicy()
 
 
 def bucket_length(t: int, multiple: int) -> int:
@@ -107,8 +171,19 @@ def form_batches(requests: Sequence[InferenceRequest],
     return batches
 
 
-def padding_efficiency(batches: Sequence[FormedBatch]) -> float:
-    """Useful frames / computed frames over a set of formed batches."""
+def padding_efficiency(batches) -> float:
+    """Useful work / computed work — ONE honest number for every
+    serving surface.
+
+    Accepts a sequence of ``FormedBatch`` (the batch path: useful vs
+    padded frames), or a slot-server stats dict (``SlotServer.stats``:
+    ``useful_units`` vs ``padded_units``, where the denominator already
+    counts empty slots, retired-row overshoot and chunk-level dead rows
+    of streaming sessions — a parked stream's idle window is waste, not
+    invisible).
+    """
+    if isinstance(batches, dict):
+        return batches["useful_units"] / max(batches["padded_units"], 1)
     useful = sum(b.frames for b in batches)
     total = sum(b.padded_frames for b in batches)
     return useful / max(total, 1)

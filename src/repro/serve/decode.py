@@ -63,6 +63,7 @@ from repro.serve.batcher import LATENCY, BatchPolicy
 from repro.serve.paging import PageAllocator, block_hashes
 from repro.serve.request import RequestQueue
 from repro.serve.sampling import SamplingParams
+from repro.serve.slots import SlotServer
 
 
 @dataclass
@@ -75,6 +76,7 @@ class TokenRequest:
     finished_sync: int = -1         # pump index at completion (latency
                                     # accounting; -1 while in flight)
     sampling: Optional[SamplingParams] = None   # None = greedy
+    tier: Optional[str] = None      # SLO tier name (None = default tier)
 
 
 def _validate_submit(prompt, max_new, max_seq, paging=None):
@@ -110,18 +112,24 @@ def _validate_submit(prompt, max_new, max_seq, paging=None):
     return prompt
 
 
-class TokenServer:
-    """Slot-based continuous batcher over the per-row decode surface.
+class TokenServer(SlotServer):
+    """Slot-based continuous batcher over the per-row decode surface —
+    the token-decode session type of the ``serve.slots.SlotServer``
+    core.
 
     Request bookkeeping lives in the payload-agnostic
-    ``serve.request.RequestQueue``; this class owns the device slots:
-    admission, the fused K-step decode window, and retirement.
+    ``serve.request.RequestQueue``; the base class owns the slot
+    lifecycle (admission, the windowed pump, retirement, abort
+    recovery); this class owns the device side: the per-row KV cache,
+    the fused K-step decode window, and token-level consumption.
 
     ``pump()`` runs one sync window and returns the requests it
     completed; ``drain()`` pumps until the queue is empty.  ``policy``
     sets the slot count (``max_batch``) and the default sync cadence
     (``sync_every`` — small under LATENCY for fast first-token
     visibility, larger under THROUGHPUT to amortize host syncs).
+    ``tiers=TieredPolicy(...)`` makes the window length and admission
+    SLO-aware (``submit(..., tier="interactive")``).
     """
 
     def __init__(self, cfg, params, *, policy: BatchPolicy = LATENCY,
@@ -129,7 +137,7 @@ class TokenServer:
                  sync_every: Optional[int] = None,
                  eos_id: Optional[int] = None,
                  paging=None, prefix_cache: bool = True,
-                 decode_kernel: bool = False):
+                 decode_kernel: bool = False, tiers=None):
         if cfg.family == "lstm_am":
             raise ValueError("TokenServer is the token-LM decode surface; "
                              "acoustic models go through StreamingEngine")
@@ -138,9 +146,9 @@ class TokenServer:
         # decode_kernel: fused attention tail (kernels/decode_attention)
         # + fused sampler (kernels/topk_sample) inside the jitted window.
         # Greedy output stays bitwise identical; sampled requests follow
-        # the fused sampler's truncated-nucleus semantics (top_k must be
-        # 1..K_CAP_DEFAULT — enforced at submit), so it is a static
-        # opt-in per server, never a silent swap.
+        # the fused sampler's truncated-nucleus semantics when top_k fits
+        # its candidate set, and fall back to the full-vocab argsort
+        # sampler (mixed window) when it doesn't.
         self.decode_kernel = decode_kernel
         self.model = build_model(cfg, paging=paging,
                                  decode_kernel=decode_kernel)
@@ -150,15 +158,14 @@ class TokenServer:
         self.max_seq = (paging.resolved_max_ctx if paging is not None
                         else max_seq)
         self.cache_dtype = cache_dtype
-        self.b = policy.max_batch
-        self.sync_every = int(sync_every if sync_every is not None
-                              else policy.sync_every)
-        if self.sync_every < 1:
-            raise ValueError("sync_every must be >= 1")
+        super().__init__(policy.max_batch,
+                         sync_every=int(sync_every if sync_every is not None
+                                        else policy.sync_every),
+                         tiers=tiers)
         self.eos_id = eos_id
-        self.queue = RequestQueue()
-        self.serve = jax.jit(self._make_window())
+        self.serve = jax.jit(self._make_window(self.sync_every))
         self._serve_sample = None       # jitted lazily on first sampled req
+        self._windows = {}              # (k, mode) -> jit, tiered windows
         self._reset = jax.jit(self.model.reset_cache_rows)
         # device state (lazily built on first pump)
         self._cache = None
@@ -166,7 +173,6 @@ class TokenServer:
         self._prompts_d = None          # device-resident prompt buffer /
         self._plens_d = None            # lens, refreshed on admission only
         # host-side slot mirrors
-        self._slots: List[Optional[object]] = [None] * self.b
         self._pos = np.zeros((self.b,), np.int64)       # tokens consumed
         self._prompts = np.zeros((self.b, self.max_seq), np.int32)
         self._plens = np.zeros((self.b,), np.int32)
@@ -188,23 +194,24 @@ class TokenServer:
             self._nshared = [0] * self.b
         else:
             self.alloc = None
-        self.stats = {"steps": 0, "syncs": 0, "slot_steps": 0,
-                      "active_slot_steps": 0, "tokens_out": 0,
-                      "admitted": 0}
+        self.stats["tokens_out"] = 0
 
     # ------------------------------------------------------- jitted window
 
-    def _make_window(self, sample: bool = False):
+    def _make_window(self, k: int, mode: str = "greedy"):
         """K fused decode steps: each row feeds its own prompt token while
         ``pos < plen`` (ragged prefill) and its last sampled token after;
         emissions accumulate on device, one host sync per window.
 
-        ``sample=True`` builds the variant taking per-row sampling knobs
-        (a second jit; the greedy window stays bitwise-identical)."""
+        ``mode`` picks the per-step sampler: ``greedy`` (bitwise argmax),
+        ``sample`` (per-row knobs), or ``mixed`` (fused sampler with the
+        argsort fallback for rows whose top_k exceeds the kernel's
+        candidate set)."""
+        sample = mode != "greedy"
         serve_step = make_serve_step(self.model, self.cfg,
                                      greedy=not sample,
-                                     use_kernel=self.decode_kernel)
-        k = self.sync_every
+                                     use_kernel=self.decode_kernel,
+                                     wide_fallback=mode == "mixed")
 
         def window(params, cache, tok, prompts, plens, samp=None):
             pmax = prompts.shape[1]
@@ -231,26 +238,38 @@ class TokenServer:
             return window(params, cache, tok, prompts, plens)
         return greedy_window
 
+    def _get_window(self, k: int, mode: str):
+        """Resolve the jitted window for this pump.  The default-length
+        greedy/sample windows keep their dedicated attributes (``serve``
+        is the failure-injection seam the tests patch); tiered lengths
+        and the mixed sampler live in a small cache — one compile per
+        distinct (k, mode)."""
+        if k == self.sync_every and mode == "greedy":
+            return self.serve
+        if k == self.sync_every and mode == "sample":
+            if self._serve_sample is None:
+                self._serve_sample = jax.jit(self._make_window(k, mode))
+            return self._serve_sample
+        key = (k, mode)
+        if key not in self._windows:
+            self._windows[key] = jax.jit(self._make_window(k, mode))
+        return self._windows[key]
+
     # ------------------------------------------------------------- submit
 
     def submit(self, prompt: np.ndarray, max_new: int = 16,
-               sampling: Optional[SamplingParams] = None) -> int:
+               sampling: Optional[SamplingParams] = None,
+               tier: Optional[str] = None) -> int:
         prompt = _validate_submit(prompt, max_new, self.max_seq,
                                   paging=self.paging)
-        if (self.decode_kernel and sampling is not None
-                and not sampling.greedy):
-            from repro.kernels.topk_sample import K_CAP_DEFAULT
-            if sampling.top_k <= 0 or sampling.top_k > K_CAP_DEFAULT:
-                raise ValueError(
-                    f"decode_kernel server samples within a "
-                    f"{K_CAP_DEFAULT}-candidate set (truncated-nucleus "
-                    f"semantics); top_k must be in 1..{K_CAP_DEFAULT}, "
-                    f"got {sampling.top_k}")
-        req = TokenRequest(-1, prompt, max_new, sampling=sampling)
+        if self.tiers is not None:
+            self.tiers.tier(tier)       # unknown tier names fail loudly
+        req = TokenRequest(-1, prompt, max_new, sampling=sampling,
+                           tier=tier)
         req.rid = self.queue.submit(req)
         return req.rid
 
-    # ---------------------------------------------------------- slot loop
+    # ---------------------------------------------------------- slot hooks
 
     def _ensure_device_state(self):
         if self._cache is None:
@@ -269,40 +288,29 @@ class TokenServer:
                 lambda a, s: a.astype(s.dtype), cache, settled)
             self._tok = jnp.zeros((self.b, 1), jnp.int32)
 
-    def _admit(self) -> List[int]:
-        """Fill free slots from the queue head (arrival order).
-
-        Paged mode additionally rents every page the request can ever
-        need up front (no mid-flight OOM), reuses published prefix pages
-        when the leading prompt blocks hash-match, and stops admitting
-        at the first request whose pages don't fit (FIFO no-skip — the
-        unfit head and everything behind it are requeued in order)."""
-        free = [i for i in range(self.b) if self._slots[i] is None]
-        if not free:
-            return []
-        reqs = self.queue.pop_pending(max_n=len(free))
-        admitted = []
-        for n, (slot, req) in enumerate(zip(free, reqs)):
-            r = req.payload
-            start = 0
-            if self.paging is not None:
-                start = self._admit_pages(slot, r)
-                if start < 0:               # head doesn't fit: requeue it
-                    self.queue.requeue([q.rid for q in reqs[n:]])
-                    break
-            self._slots[slot] = req
-            self._pos[slot] = start
-            self._prompts[slot] = 0
-            self._prompts[slot, :r.prompt.shape[0]] = r.prompt
-            self._plens[slot] = r.prompt.shape[0]
-            s = r.sampling or SamplingParams()
-            self._temp[slot] = s.temperature
-            self._topk[slot] = s.top_k
-            self._topp[slot] = s.top_p
-            self._seed[slot] = np.int32(np.uint32(s.seed & 0xFFFFFFFF))
-            admitted.append(slot)
-        self.stats["admitted"] += len(admitted)
-        return admitted
+    def _admit_slot(self, slot: int, req) -> bool:
+        """Install one request's host mirrors.  Paged mode additionally
+        rents every page the request can ever need up front (no
+        mid-flight OOM), reusing published prefix pages when the leading
+        prompt blocks hash-match; False (doesn't fit) makes the base
+        class requeue it and everything behind it — FIFO no-skip, no
+        starvation of big requests."""
+        r = req.payload
+        start = 0
+        if self.paging is not None:
+            start = self._admit_pages(slot, r)
+            if start < 0:
+                return False
+        self._pos[slot] = start
+        self._prompts[slot] = 0
+        self._prompts[slot, :r.prompt.shape[0]] = r.prompt
+        self._plens[slot] = r.prompt.shape[0]
+        s = r.sampling or SamplingParams()
+        self._temp[slot] = s.temperature
+        self._topk[slot] = s.top_k
+        self._topp[slot] = s.top_p
+        self._seed[slot] = np.int32(np.uint32(s.seed & 0xFFFFFFFF))
+        return True
 
     def _admit_pages(self, slot, r) -> int:
         """Lease pages for one request.  Returns the row's start
@@ -332,15 +340,13 @@ class TokenServer:
         # always fed, so the row always produces a real first logit.
         return n_hit * ps
 
-    def _abort(self):
-        """Failure recovery: a failed window must not strand its slots —
-        outputs reset, requests requeued, device state dropped (same
-        invariant as StreamingEngine.run / restore_in_flight)."""
-        for req in self._slots:
-            if req is not None:
-                req.payload.out.clear()
-                req.payload.done = False
-        self._slots = [None] * self.b
+    def _reset_payload(self, payload):
+        payload.out.clear()
+        payload.done = False
+
+    def _drop_state(self):
+        """Abort hygiene (same invariant as StreamingEngine.run /
+        restore_in_flight): device state dropped, host mirrors zeroed."""
         self._plens[:] = 0
         self._pos[:] = 0
         self._cache = None
@@ -358,107 +364,98 @@ class TokenServer:
             self._blocks = [None] * self.b
             self._hashes = [None] * self.b
             self._nshared = [0] * self.b
-        self.queue.restore_in_flight()
 
-    def pump(self) -> Dict[int, TokenRequest]:
-        """One sync window: admit pending requests into free slots, run
-        ``sync_every`` fused decode steps, one device→host sync for the
-        window's emissions, then retire rows that hit max_new/EOS.
-        Returns (and evicts) the requests completed by this window."""
-        k = self.sync_every
-        try:
-            admitted = self._admit()
-            if all(s is None for s in self._slots):
-                return {rid: cr.result
-                        for rid, cr in self.queue.pop_completed().items()}
-            self._ensure_device_state()
-            if self.paging is not None and self._tables_dirty:
-                # block-table changes (admission leases, retirement
-                # returns) reach the device as a fresh pages dict; rows
-                # whose table row is all-zero point at the trash page
-                self._cache = dict(self._cache)
-                self._cache["pages"] = {
-                    "tables": jnp.asarray(self._tables),
-                    "caps": jnp.asarray(self._caps)}
-                self._tables_dirty = False
-            if admitted:
-                mask = np.zeros((self.b,), bool)
-                mask[admitted] = True
-                if self.paging is not None:
-                    # prefix-cache hits start past the shared pages
-                    self._cache = self._reset(
-                        self._cache, jnp.asarray(mask),
-                        jnp.asarray(self._pos.astype(np.int32)))
-                else:
-                    self._cache = self._reset(self._cache,
-                                              jnp.asarray(mask))
-                # prompts/plens only change on admission: refresh the
-                # device copies here, not once per window (a retired
-                # slot's stale device plen is harmless — the row is
-                # garbage until its next admission re-uploads)
-                self._prompts_d = jnp.asarray(self._prompts)
-                self._plens_d = jnp.asarray(self._plens)
-            if any(req is not None and req.payload.sampling is not None
-                   and not req.payload.sampling.greedy
-                   for req in self._slots):
-                if self._serve_sample is None:
-                    self._serve_sample = jax.jit(
-                        self._make_window(sample=True))
-                samp = {"temperature": jnp.asarray(self._temp),
-                        "top_k": jnp.asarray(self._topk),
-                        "top_p": jnp.asarray(self._topp),
-                        "seed": jnp.asarray(self._seed)}
-                cache, tok, emitted = self._serve_sample(
-                    self.params, self._cache, self._tok,
-                    self._prompts_d, self._plens_d, samp)
+    def _pre_window(self, admitted: List[int]):
+        self._ensure_device_state()
+        if self.paging is not None and self._tables_dirty:
+            # block-table changes (admission leases, retirement
+            # returns) reach the device as a fresh pages dict; rows
+            # whose table row is all-zero point at the trash page
+            self._cache = dict(self._cache)
+            self._cache["pages"] = {
+                "tables": jnp.asarray(self._tables),
+                "caps": jnp.asarray(self._caps)}
+            self._tables_dirty = False
+        if admitted:
+            mask = np.zeros((self.b,), bool)
+            mask[admitted] = True
+            if self.paging is not None:
+                # prefix-cache hits start past the shared pages
+                self._cache = self._reset(
+                    self._cache, jnp.asarray(mask),
+                    jnp.asarray(self._pos.astype(np.int32)))
             else:
-                cache, tok, emitted = self.serve(
-                    self.params, self._cache, self._tok,
-                    self._prompts_d, self._plens_d)
-            emitted = np.asarray(emitted)    # THE host sync of this window
-        except BaseException:
-            # admission, row reset and the window itself all recover the
-            # same way: nothing may stay stranded in a slot
-            self._abort()
-            raise
+                self._cache = self._reset(self._cache,
+                                          jnp.asarray(mask))
+            # prompts/plens only change on admission: refresh the
+            # device copies here, not once per window (a retired
+            # slot's stale device plen is harmless — the row is
+            # garbage until its next admission re-uploads)
+            self._prompts_d = jnp.asarray(self._prompts)
+            self._plens_d = jnp.asarray(self._plens)
+
+    def _window_mode(self) -> str:
+        """greedy | sample | mixed, from the rows actually in flight.
+        ``mixed`` (fused sampler + per-row argsort fallback) only when a
+        fused server holds a row whose top_k its candidate set can't
+        honor — greedy-only windows stay on the bitwise-argmax jit."""
+        sampled = [req.payload.sampling for req in self._slots
+                   if req is not None and req.payload.sampling is not None
+                   and not req.payload.sampling.greedy]
+        if not sampled:
+            return "greedy"
+        if self.decode_kernel:
+            from repro.kernels.topk_sample import K_CAP_DEFAULT
+            if any(s.top_k <= 0 or s.top_k > K_CAP_DEFAULT
+                   for s in sampled):
+                return "mixed"
+        return "sample"
+
+    def _run_window(self, k: int) -> np.ndarray:
+        mode = self._window_mode()
+        win = self._get_window(k, mode)
+        if mode == "greedy":
+            cache, tok, emitted = win(self.params, self._cache, self._tok,
+                                      self._prompts_d, self._plens_d)
+        else:
+            samp = {"temperature": jnp.asarray(self._temp),
+                    "top_k": jnp.asarray(self._topk),
+                    "top_p": jnp.asarray(self._topp),
+                    "seed": jnp.asarray(self._seed)}
+            cache, tok, emitted = win(self.params, self._cache, self._tok,
+                                      self._prompts_d, self._plens_d, samp)
+        emitted = np.asarray(emitted)        # THE host sync of this window
         self._cache, self._tok = cache, tok
-        self.stats["syncs"] += 1
-        self.stats["steps"] += k
-        self.stats["slot_steps"] += k * self.b
-        for i, req in enumerate(self._slots):
-            if req is None:
-                continue        # empty slots don't advance: their host
-                                # position must keep matching the device
-                                # row (reset on admission), not drift
-            p0 = int(self._pos[i])
-            self._pos[i] += k
-            r = req.payload
-            plen = int(self._plens[i])
-            live = 0
-            for j in range(k):
-                if r.done:          # overshoot past retirement: excluded
-                    break           # from cost, tokens discarded
-                live += 1
-                g = p0 + j - (plen - 1)     # generated-token index
-                if g < 0:                   # still consuming the prompt
-                    continue
-                t = int(emitted[j, i])
-                r.out.append(t)
-                self.stats["tokens_out"] += 1
-                if (self.eos_id is not None and t == self.eos_id) \
-                        or len(r.out) >= r.max_new:
-                    r.done = True
-            self.stats["active_slot_steps"] += live
-            if r.done:
-                r.finished_sync = self.stats["syncs"]
-                self._slots[i] = None
-                self._plens[i] = 0
-                self._temp[i] = 0.0      # stale rows back to cheap argmax
-                if self.paging is not None:
-                    self._release_slot(i)
-                self.queue.complete(r.rid, r)
-        return {rid: cr.result
-                for rid, cr in self.queue.pop_completed().items()}
+        return emitted
+
+    def _consume(self, i: int, req, emitted, k: int):
+        p0 = int(self._pos[i])
+        self._pos[i] += k
+        r = req.payload
+        plen = int(self._plens[i])
+        live = 0
+        for j in range(k):
+            if r.done:          # overshoot past retirement: excluded
+                break           # from cost, tokens discarded
+            live += 1
+            g = p0 + j - (plen - 1)     # generated-token index
+            if g < 0:                   # still consuming the prompt
+                continue
+            t = int(emitted[j, i])
+            r.out.append(t)
+            self.stats["tokens_out"] += 1
+            if (self.eos_id is not None and t == self.eos_id) \
+                    or len(r.out) >= r.max_new:
+                r.done = True
+        # useful == live: prefill consumption and kept generations are
+        # both requested work; only post-retirement overshoot is waste
+        return live, live
+
+    def _retire_slot(self, i: int):
+        self._plens[i] = 0
+        self._temp[i] = 0.0          # stale rows back to cheap argmax
+        if self.paging is not None:
+            self._release_slot(i)
 
     def _release_slot(self, i):
         """Return a retired slot's pages.  Freshly written prompt blocks
@@ -492,21 +489,6 @@ class TokenServer:
         s["free"] = self.alloc.free_pages()
         s["live"] = self.alloc.live_pages()
         return s
-
-    @property
-    def n_active(self) -> int:
-        return sum(s is not None for s in self._slots)
-
-    def drain(self) -> Dict[int, TokenRequest]:
-        """Pump until no pending or in-flight work remains.  Returns (and
-        evicts) the requests completed since the last drain — the
-        server's ledger must not grow with uptime."""
-        done: Dict[int, TokenRequest] = {}
-        while self.queue.n_pending or self.n_active:
-            done.update(self.pump())
-        done.update({rid: cr.result
-                     for rid, cr in self.queue.pop_completed().items()})
-        return done
 
 
 class RoundTokenServer:

@@ -42,7 +42,7 @@ from repro.kernels import _dispatch
 from repro.kernels.topk_logits import topk_logits
 from repro.launch import steps
 from repro.models import build_model
-from repro.models.api import supports_streaming
+from repro.models.api import stream_feat_dim, supports_streaming
 from repro.serve.batcher import (LATENCY, THROUGHPUT, BatchPolicy,
                                  bucket_length, form_batches)
 from repro.serve.request import CompletedRequest, RequestQueue
@@ -256,13 +256,14 @@ class StreamingEngine:
         if not chunks:
             return StreamFeed(None, None, {})
         chunks = {sid: np.asarray(c) for sid, c in chunks.items()}
+        fd = stream_feat_dim(self.cfg)
         for sid, c in chunks.items():
             if not 0 <= sid < self.n_slots or sid in self._slot_free:
                 raise ValueError(f"stream {sid} is not open")
-            if c.ndim != 2 or c.shape[1] != self.cfg.feat_dim:
+            if c.ndim != 2 or c.shape[1] != fd:
                 raise ValueError(
-                    f"stream {sid}: expected (t, {self.cfg.feat_dim}) "
-                    f"chunk, got {c.shape}")
+                    f"stream {sid}: expected (t, {fd}) chunk, got "
+                    f"{c.shape}")
             if c.shape[0] == 0:
                 raise ValueError(
                     f"stream {sid}: zero-frame chunk — skip the stream "
@@ -270,8 +271,7 @@ class StreamingEngine:
         self._ensure_stream_state()
         t_max = bucket_length(max(c.shape[0] for c in chunks.values()),
                               self.policy.bucket_multiple)
-        feats = np.zeros((self.n_slots, t_max, self.cfg.feat_dim),
-                         np.float32)
+        feats = np.zeros((self.n_slots, t_max, fd), np.float32)
         lens = np.zeros((self.n_slots,), np.int32)
         for sid, c in chunks.items():
             feats[sid, :c.shape[0]] = c

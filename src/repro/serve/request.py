@@ -96,6 +96,30 @@ class RequestQueue:
             out.append(req)
         return out
 
+    def peek_pending(self) -> List[InferenceRequest]:
+        """Read-only view of the pending queue in arrival order — the
+        admission controller's pressure probe (no state change)."""
+        return list(self._pending)
+
+    def pop_pending_where(self, pred, max_n: Optional[int] = None
+                          ) -> List[InferenceRequest]:
+        """Move up to max_n requests satisfying ``pred`` into the
+        in-flight set, scanning in arrival order.  Non-matching requests
+        stay pending *in place* (order preserved) — the tier-aware
+        admission hook: a shed firehose session is deferred, not
+        dropped, and doesn't block the interactive session behind it."""
+        out: List[InferenceRequest] = []
+        keep: List[InferenceRequest] = []
+        while self._pending:
+            req = self._pending.popleft()
+            if (max_n is None or len(out) < max_n) and pred(req):
+                self._in_flight[req.rid] = req
+                out.append(req)
+            else:
+                keep.append(req)
+        self._pending.extend(keep)
+        return out
+
     def complete(self, rid: int, result: Any):
         req = self._in_flight.pop(rid)
         self._done[rid] = CompletedRequest(rid, result, req.meta)

@@ -279,19 +279,40 @@ def test_token_server_fused_greedy_parity():
     assert run(False) == run(True)
 
 
-def test_token_server_fused_rejects_uncappable_topk():
+def test_token_server_fused_mixed_window_parity():
+    """A fused server no longer rejects top_k beyond the kernel's
+    candidate set: wide rows (top_k == 0 full-vocab, top_k > K_CAP)
+    route through the argsort sampler inside the mixed window, bitwise
+    what the non-kernel server draws for them, while cappable rows stay
+    on the fused path — all in the same windows."""
     from repro.serve.decode import TokenServer
     from repro.serve.sampling import SamplingParams
     cfg = reduced(get_arch("qwen2.5-3b"))
     model = build_model(cfg)
     params = model.init(jax.random.key(1))
-    srv = TokenServer(cfg, params, max_seq=64, decode_kernel=True)
-    prompt = np.asarray([1, 2, 3], np.int32)
-    for bad in (0, 33):
-        with pytest.raises(ValueError, match="top_k"):
-            srv.submit(prompt, max_new=4,
-                       sampling=SamplingParams(temperature=1.0, top_k=bad))
-    # greedy and cappable sampled requests are accepted
-    srv.submit(prompt, max_new=4)
-    srv.submit(prompt, max_new=4,
-               sampling=SamplingParams(temperature=1.0, top_k=20))
+    rng = np.random.default_rng(7)
+    subs = []       # (prompt, max_new, sampling)
+    for i, top_k in enumerate([0, 33, 64, 20, 8]):   # wide, wide, wide,
+        prompt = rng.integers(                       # cappable, cappable
+            1, cfg.vocab_size,
+            size=(int(rng.integers(3, 10)),)).astype(np.int32)
+        subs.append((prompt, int(rng.integers(4, 9)),
+                     SamplingParams(temperature=1.0, top_k=top_k,
+                                    top_p=0.95, seed=100 + i)))
+    subs.append((np.asarray([1, 2, 3], np.int32), 4, None))   # greedy rides
+
+    def run(decode_kernel):
+        srv = TokenServer(cfg, params, max_seq=64, sync_every=4,
+                          decode_kernel=decode_kernel)
+        for p, mn, s in subs:
+            srv.submit(p, max_new=mn, sampling=s)
+        return {rid: list(r.out) for rid, r in srv.drain().items()}
+
+    plain, fused = run(False), run(True)
+    # wide and greedy rows: bitwise vs the argsort server (rows 0-2, 5);
+    # cappable rows follow fused truncated-nucleus semantics, so only
+    # shape is pinned for them
+    for rid in (0, 1, 2, 5):
+        assert plain[rid] == fused[rid]
+    for rid in (3, 4):
+        assert len(fused[rid]) == len(plain[rid])

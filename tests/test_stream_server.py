@@ -1,0 +1,321 @@
+"""StreamServer: streaming-AM sessions over the SlotServer core.
+
+Acceptance pins (ISSUE 9):
+  * slot-based emissions bitwise-identical to the lockstep
+    ``StreamingEngine.feed`` loop, for both streaming families (LSTM AM
+    per-frame posteriors, whisper one-position-per-chunk);
+  * a stream that detaches, has its slot replaced by queued work, and
+    reattaches emits bitwise what an uninterrupted solo run emits;
+  * SLO tiers: interactive presence tightens the window, firehose
+    sessions shed/park under interactive pressure and still finish
+    correctly;
+  * honest frame-level utilization (dead rows and padding counted).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.configs.base import Segment
+from repro.configs.lstm_am_7khr import CONFIG
+from repro.models import build_model
+from repro.serve import (FIREHOSE, INTERACTIVE, SLOTier, StreamServer,
+                         StreamingEngine, TieredPolicy)
+
+F, V, K = 6, 25, 5
+
+AM = CONFIG.replace(
+    lstm_hidden=16, feat_dim=F, n_senones=V, vocab_size=V,
+    segments=(Segment((CONFIG.segments[0].pattern[0],), repeat=2),))
+WHISPER = reduced(get_arch("whisper-medium"))
+
+
+@pytest.fixture(scope="module")
+def am():
+    m = build_model(AM)
+    return m.init(jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def whisper():
+    m = build_model(WHISPER)
+    return m.init(jax.random.key(1))
+
+
+def _utts(rng, lens, fd=F):
+    return [(rng.normal(size=(t, fd)) * 0.1).astype(np.float32)
+            for t in lens]
+
+
+def _lockstep(cfg, params, utt, chunk, k=K):
+    """The pre-refactor reference: one solo stream through the lockstep
+    open_stream/feed loop at the same chunk boundaries."""
+    eng = StreamingEngine(cfg, params, k=k, n_slots=2)
+    sid = eng.open_stream()
+    vals, idx = [], []
+    for c0 in range(0, utt.shape[0], chunk):
+        v, i = eng.feed({sid: utt[c0:c0 + chunk]})[sid]
+        vals.append(v)
+        idx.append(i)
+    eng.close_stream(sid)
+    return np.concatenate(vals, axis=0), np.concatenate(idx, axis=0)
+
+
+# ----------------------------------------------------- lockstep parity
+
+def test_stream_server_matches_lockstep_am(am):
+    rng = np.random.default_rng(0)
+    lens = [23, 7, 40, 16, 31]          # ragged: partial last chunks,
+    utts = _utts(rng, lens)             # staggered retire/admit
+    srv = StreamServer(AM, am, n_slots=3, chunk_frames=8, sync_every=2,
+                       k=K)
+    rids = [srv.submit(u) for u in utts]
+    done = srv.drain()
+    assert sorted(done) == sorted(rids)
+    for rid, u in zip(rids, utts):
+        sv, si = done[rid].emissions()
+        assert sv.shape == (u.shape[0], K)          # per-frame emission
+        lv, li = _lockstep(AM, am, u, 8)
+        np.testing.assert_array_equal(si, li)
+        np.testing.assert_array_equal(sv, lv)       # bitwise, not close
+    assert srv.stats["useful_units"] == sum(lens)
+    assert 0.0 < srv.utilization() <= 1.0
+
+
+def test_stream_server_matches_lockstep_whisper(whisper):
+    rng = np.random.default_rng(1)
+    lens = [11, 4, 19]
+    utts = _utts(rng, lens, WHISPER.d_model)
+    srv = StreamServer(WHISPER, whisper, n_slots=2, chunk_frames=4,
+                       sync_every=2, k=K)
+    rids = [srv.submit(u) for u in utts]
+    done = srv.drain()
+    assert sorted(done) == sorted(rids)
+    for rid, u, t in zip(rids, utts, lens):
+        sv, si = done[rid].emissions()
+        n_chunks = -(-t // 4)
+        assert sv.shape == (n_chunks, K)        # one position per chunk
+        lv, li = _lockstep(WHISPER, whisper, u, 4)
+        np.testing.assert_array_equal(si, li)
+        np.testing.assert_array_equal(sv, lv)
+
+
+# -------------------------------------------------- detach / reattach
+
+def test_detach_replace_reattach_bitwise(am):
+    """ISSUE 9 satellite: a stream that detaches mid-flight, has its
+    slot taken by queued work, then reattaches must emit bitwise what an
+    uninterrupted solo run emits."""
+    rng = np.random.default_rng(2)
+    utt_a, utt_b = _utts(rng, [40, 12])
+
+    solo = StreamServer(AM, am, n_slots=1, chunk_frames=8, sync_every=1,
+                        k=K)
+    ra = solo.submit(utt_a)
+    ref_v, ref_i = solo.drain()[ra].emissions()
+
+    srv = StreamServer(AM, am, n_slots=1, chunk_frames=8, sync_every=1,
+                       k=K)
+    ra = srv.submit(utt_a)
+    srv.pump()                              # A consumes one chunk
+    srv.pump()                              # ... and another
+    srv.detach(ra)                          # state row -> host
+    assert srv.n_active == 0
+    rb = srv.submit(utt_b)                  # B takes A's (only) slot
+    done = {}
+    while rb not in done:
+        done.update(srv.pump())
+    bv, bi = done[rb].emissions()
+    lv, li = _lockstep(AM, am, utt_b, 8)
+    np.testing.assert_array_equal(bi, li)   # B unharmed by A's residue
+    np.testing.assert_array_equal(bv, lv)
+    srv.reattach(ra)                        # A's row restored bitwise
+    done = srv.drain()
+    av, ai = done[ra].emissions()
+    np.testing.assert_array_equal(ai, ref_i)
+    np.testing.assert_array_equal(av, ref_v)
+    assert srv.stats["parked"] == 1
+
+
+def test_detach_requires_attachment_and_drain_refuses_held(am):
+    srv = StreamServer(AM, am, n_slots=1, chunk_frames=4, sync_every=1)
+    rid = srv.submit(_utts(np.random.default_rng(3), [12])[0])
+    with pytest.raises(KeyError):
+        srv.detach(rid)                     # queued, not yet attached
+    srv.pump()
+    srv.detach(rid)
+    with pytest.raises(RuntimeError, match="detached"):
+        srv.drain()                         # held stream never finishes
+    with pytest.raises(ValueError):
+        srv.reattach(999)
+    srv.reattach(rid)
+    assert rid in srv.drain()
+
+
+# --------------------------------------------------------- live streams
+
+def test_live_append_close_matches_final_submit(am):
+    rng = np.random.default_rng(4)
+    (utt,) = _utts(rng, [24])
+    ref = StreamServer(AM, am, n_slots=1, chunk_frames=8, sync_every=2)
+    rr = ref.submit(utt)
+    ref_v, ref_i = ref.drain()[rr].emissions()
+
+    srv = StreamServer(AM, am, n_slots=1, chunk_frames=8, sync_every=2)
+    rid = srv.submit(utt[:8], final=False)
+    srv.pump()                              # consumes what's there...
+    srv.pump()                              # ...then idles (dead row)
+    srv.append(rid, utt[8:])
+    srv.close(rid)
+    with pytest.raises(ValueError):
+        srv.append(rid, utt[:8])            # closed
+    done = {}
+    while rid not in done:
+        done.update(srv.pump())
+    v, i = done[rid].emissions()
+    np.testing.assert_array_equal(i, ref_i)
+    np.testing.assert_array_equal(v, ref_v)
+
+
+def test_drain_refuses_open_streams(am):
+    srv = StreamServer(AM, am, n_slots=1, chunk_frames=4, sync_every=1)
+    srv.submit(_utts(np.random.default_rng(5), [8])[0], final=False)
+    with pytest.raises(RuntimeError, match="open streams"):
+        srv.drain()
+
+
+# ----------------------------------------------------------- SLO tiers
+
+def test_interactive_presence_tightens_window(am):
+    rng = np.random.default_rng(6)
+    fire, inter = _utts(rng, [64, 8])
+    tiers = TieredPolicy((INTERACTIVE, FIREHOSE))
+    srv = StreamServer(AM, am, n_slots=2, chunk_frames=4, sync_every=8,
+                       tiers=tiers)
+    srv.submit(fire, tier="firehose")
+    srv.pump()
+    assert srv.stats["steps"] == 16          # firehose-only: long window
+    srv.submit(inter, tier="interactive")
+    srv.pump()
+    assert srv.stats["steps"] == 16 + 2      # interactive: 2-step window
+    with pytest.raises(KeyError):
+        srv.submit(inter, tier="bulk")       # unknown tier fails loudly
+
+
+def test_firehose_parks_under_interactive_pressure(am):
+    """Admission control: firehose streams occupying every slot are
+    parked when interactive work queues, re-admitted after it clears,
+    and their emissions are still bitwise correct."""
+    rng = np.random.default_rng(7)
+    fires = _utts(rng, [200, 200])      # outlast the 16-step window
+    inters = _utts(rng, [8, 8])
+    tiers = TieredPolicy((INTERACTIVE, FIREHOSE), shed_threshold=0.5)
+    srv = StreamServer(AM, am, n_slots=2, chunk_frames=4, sync_every=2,
+                       k=K, tiers=tiers)
+    rf = [srv.submit(u, tier="firehose") for u in fires]
+    srv.pump()                               # both firehose attached
+    assert srv.occupancy()["firehose"] == 1.0
+    ri = [srv.submit(u, tier="interactive") for u in inters]
+    done2 = srv.pump()                       # rebalance parks firehose
+    assert srv.stats["parked"] >= 1
+    # the evicting interactive pair was admitted AND finished in that
+    # single short window — the whole point of the tier machinery
+    assert sorted(done2) == sorted(ri)
+    done = srv.drain()
+    done.update(done2)
+    assert sorted(done) == sorted(rf + ri)
+    for rid, u in zip(rf + ri, fires + inters):
+        sv, si = done[rid].emissions()
+        lv, li = _lockstep(AM, am, u, 4)
+        np.testing.assert_array_equal(si, li)
+        np.testing.assert_array_equal(sv, lv)
+    # interactive finished strictly earlier than the parked firehose
+    assert max(done[r].finished_sync for r in ri) < \
+        max(done[r].finished_sync for r in rf)
+
+
+def test_tier_max_batch_caps_occupancy(am):
+    rng = np.random.default_rng(8)
+    utts = _utts(rng, [40, 40, 40])     # outlast one 4-step window
+    tiers = TieredPolicy((SLOTier("interactive", sync_every=2),
+                          SLOTier("firehose", sync_every=4, max_batch=1,
+                                  preemptible=True)))
+    srv = StreamServer(AM, am, n_slots=3, chunk_frames=4, sync_every=4,
+                       tiers=tiers)
+    for u in utts:
+        srv.submit(u, tier="firehose")
+    srv.pump()
+    assert srv._tier_counts().get("firehose", 0) == 1    # capped
+    done = srv.drain()
+    assert len(done) == 3                                # all served
+
+
+# ------------------------------------------------------- honest stats
+
+def test_frame_utilization_counts_padding_and_dead_rows(am):
+    rng = np.random.default_rng(9)
+    (utt,) = _utts(rng, [10])
+    srv = StreamServer(AM, am, n_slots=4, chunk_frames=8, sync_every=2)
+    rid = srv.submit(utt)
+    done = srv.drain()
+    assert rid in done
+    # one window: 4 slots x 2 steps x 8 frames computed, 10 useful
+    assert srv.stats["padded_units"] == 4 * 2 * 8
+    assert srv.stats["useful_units"] == 10
+    assert srv.utilization() == 10 / 64
+    # the batch path's padding_efficiency reads slot stats too: one
+    # honest number across surfaces (ISSUE 9 satellite)
+    from repro.serve import padding_efficiency
+    assert padding_efficiency(srv.stats) == srv.utilization()
+
+
+def test_abort_recovers_streams(am):
+    """A failed window must not strand its streams: they restart from
+    frame 0 and still produce correct output."""
+    rng = np.random.default_rng(10)
+    (utt,) = _utts(rng, [16])
+    srv = StreamServer(AM, am, n_slots=2, chunk_frames=4, sync_every=1,
+                       k=K)
+    rid = srv.submit(utt)
+    srv.pump()
+    orig = srv._run_window
+
+    def boom(k):
+        raise RuntimeError("injected")
+
+    srv._run_window = boom
+    with pytest.raises(RuntimeError, match="injected"):
+        srv.pump()
+    srv._run_window = orig
+    assert srv.n_active == 0 and srv.queue.n_pending == 1
+    v, i = srv.drain()[rid].emissions()
+    lv, li = _lockstep(AM, am, utt, 4)
+    np.testing.assert_array_equal(i, li)
+    np.testing.assert_array_equal(v, lv)
+
+
+def test_submit_validates(am):
+    srv = StreamServer(AM, am, n_slots=1, chunk_frames=4, sync_every=1)
+    with pytest.raises(ValueError):
+        srv.submit(np.zeros((4, F + 1), np.float32))
+    with pytest.raises(ValueError):
+        srv.submit(np.zeros((0, F), np.float32))
+
+    wsrv_cap = 8
+    from repro.configs.lstm_am_7khr import TEACHER
+    bidi = TEACHER.replace(
+        lstm_hidden=16, feat_dim=F, n_senones=V, vocab_size=V,
+        segments=(Segment((TEACHER.segments[0].pattern[0],), repeat=2),))
+    with pytest.raises(ValueError, match="streaming"):
+        StreamServer(bidi, None, n_slots=1)
+
+
+def test_whisper_max_frames_capacity(whisper):
+    srv = StreamServer(WHISPER, whisper, n_slots=1, chunk_frames=4,
+                       sync_every=1, max_frames=8)
+    with pytest.raises(ValueError, match="max_frames"):
+        srv.submit(np.zeros((9, WHISPER.d_model), np.float32))
+    rid = srv.submit(np.zeros((4, WHISPER.d_model), np.float32),
+                     final=False)
+    with pytest.raises(ValueError, match="max_frames"):
+        srv.append(rid, np.zeros((5, WHISPER.d_model), np.float32))
