@@ -1,0 +1,112 @@
+"""Elastic-wave benchmark: continuous generate -> train -> promote under
+injected worker deaths, as numbers.
+
+Runs the full wave driver (``SSLPipeline.run_waves``) at laptop scale:
+baseline + teacher, then ``--waves`` generate/train/promote waves with
+one BMUF lane killed after block 1 of every wave and revived two blocks
+later.  Reports the costs the paper's million-hour operation cares
+about — how many waves per hour the stack sustains, how many worker
+deaths it absorbed, and what membership changes cost — next to the
+health checks that make the numbers trustworthy (manifest
+checksum-verified, generation ledger fully done).
+
+Writes ``experiments/benchmarks/elastic.json`` and mirrors it to
+repo-root ``BENCH_elastic.json`` for the tier2-elastic CI gates:
+
+  waves >= 2, every wave's kill absorbed (final W back to full),
+  manifest + ledger clean, resize overhead a small fraction of wall.
+
+  PYTHONPATH=src python benchmarks/elastic_bench.py
+  PYTHONPATH=src python benchmarks/elastic_bench.py --waves 3
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import shutil
+import time
+
+
+def run(n_waves: int, out_dir: str, work_dir: str) -> dict:
+    from repro.core.ssl_pipeline import PipelineConfig, SSLPipeline
+
+    # fresh work dir: wave numbering and ledger state start from zero
+    shutil.rmtree(work_dir, ignore_errors=True)
+    pc = dataclasses.replace(PipelineConfig.tiny(), bmuf_workers=4,
+                             bmuf_block_steps=2, n_sub_epochs=4,
+                             labeled_every=2, chunked_until=3)
+    pipe = SSLPipeline(pc, out_dir=work_dir, student_trainer="bmuf")
+
+    t0 = time.perf_counter()
+    base = pipe.stage_baseline()
+    pipe.stage_teacher()
+    t_setup = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    rep = pipe.run_waves(n_waves, kill_at=1, revive_after=2)
+    t_waves = time.perf_counter() - t0
+
+    final_w = [wv["student"]["final_workers"] for wv in rep["waves"]]
+    rec = {
+        "waves": rep["n_waves"],
+        "bmuf_workers": pc.bmuf_workers,
+        "wall_s": {"setup": round(t_setup, 2),
+                   "waves": round(t_waves, 2)},
+        "waves_per_hour": round(rep["n_waves"] / (t_waves / 3600.0), 2),
+        "restarts_absorbed": rep["restarts_absorbed"],
+        "resize_count": rep["resize_count"],
+        "resize_overhead_s": rep["resize_seconds"],
+        "resize_overhead_frac": round(rep["resize_seconds"]
+                                      / max(t_waves, 1e-9), 4),
+        "final_workers_per_wave": final_w,
+        "all_kills_absorbed": all(w == pc.bmuf_workers for w in final_w),
+        "manifest_clean": rep["manifest_clean"],
+        "n_verified_shards": rep["n_verified"],
+        "gc_removed": rep["gc_removed"],
+        "ledger_clean": rep["ledger_clean"],
+        "store_waves": [wv["wave"] for wv in rep["waves"]],
+        "baseline_fer": base["val_fer"],
+        "final_fer": rep["final_fer"],
+        "rel_fer_reduction_pct": rep["rel_fer_reduction_pct"],
+        "chaos": [wv["student"]["chaos"] for wv in rep["waves"]],
+    }
+
+    print(f"{'wave':<6}{'store':>6}{'FER':>8}{'resizes':>9}"
+          f"{'final W':>9}")
+    for i, wv in enumerate(rep["waves"]):
+        s = wv["student"]
+        print(f"{i:<6}{wv['wave']:>6}{s['val_fer']:>8.3f}"
+              f"{s['resizes']['count']:>9}{s['final_workers']:>9}")
+    print(f"{rec['waves_per_hour']} waves/hour, "
+          f"{rec['restarts_absorbed']} deaths absorbed across "
+          f"{rec['resize_count']} resizes "
+          f"({rec['resize_overhead_s']}s, "
+          f"{100 * rec['resize_overhead_frac']:.2f}% of wall)")
+    print(f"manifest clean={rec['manifest_clean']} "
+          f"({rec['n_verified_shards']} shards), "
+          f"ledger done={rec['ledger_clean']}")
+
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "elastic.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    # repo-root copy: the artifact the tier2-elastic CI gates read
+    with open("BENCH_elastic.json", "w") as f:
+        json.dump(rec, f, indent=2)
+    print(f"wrote {path} and BENCH_elastic.json")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--waves", type=int, default=2)
+    ap.add_argument("--out", default="experiments/benchmarks")
+    ap.add_argument("--work-dir", default="experiments/elastic_bench")
+    args = ap.parse_args()
+    run(args.waves, args.out, args.work_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,7 @@
 """The 1M-hour scheduled-learning recipe, end to end (paper §3.3/§6).
 
   PYTHONPATH=src python examples/million_hour_schedule.py
+  PYTHONPATH=src python examples/million_hour_schedule.py --elastic
 
 Prints the paper's exact 18-sub-epoch schedule (55k hours each, labeled
 interleave every 5, chunked BPTT until 15, fine-tune 16-18), then executes
@@ -8,12 +9,22 @@ the same *structure* scaled to minutes of synthetic audio with the BMUF
 trainer (the paper's 64-GPU arm), reporting per-sub-epoch relative FER
 reduction — the laptop twin of the paper's Figure 1.
 
+``--elastic`` runs the continuous-wave driver instead: repeated
+generate -> train -> promote waves (the student becomes the next wave's
+teacher through the v2 store's atomic wave supersede) under injected
+worker deaths — one BMUF lane is killed mid-wave and revived two blocks
+later, the block average shrinking to the survivors and growing back at
+the next sync.  The run ends with the store checksum-verified, orphans
+garbage-collected, and the generation ledger fully done.
+
 Data plane: target generation is partitioned across two ledgered
 workers into the manifest-backed LogitStore v2, and every Trainer.fit
 consumes its shards through the async prefetching feed — the same
 producer/consumer path a real million-hour run scales out on
 (repro.store + repro.pipeline).
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -24,19 +35,22 @@ from repro.models import build_model
 from repro.seqtrain.smbr import frame_error_rate
 
 
-def main():
-    print("== the paper's 1M-hour schedule (structure) ==")
-    print(scheduled.describe(scheduled.ScheduleConfig.paper_1m()))
-    print()
-
-    print("== scaled execution with BMUF (paper's 64-GPU arm) ==")
-    pc = PipelineConfig(n_labeled=24, n_unlabeled=96, n_val=8,
+def _pipeline(out_dir):
+    # sized so each sub-epoch's unlabeled pass fills at least one full
+    # BMUF block (workers*block_steps microbatches at one lr) — smaller
+    # corpora drop every partial block at the phase boundary and the
+    # student never updates
+    pc = PipelineConfig(n_labeled=48, n_unlabeled=192, n_val=8,
                         epochs_baseline=2, n_sub_epochs=4,
                         labeled_every=2, chunked_until=3,
                         bmuf_workers=4, bmuf_block_steps=2,
                         gen_workers=2, prefetch=2)
-    pipe = SSLPipeline(pc, out_dir="experiments/million_hour",
-                       student_trainer="bmuf")
+    return SSLPipeline(pc, out_dir=out_dir, student_trainer="bmuf")
+
+
+def run_static():
+    print("== scaled execution with BMUF (paper's 64-GPU arm) ==")
+    pipe = _pipeline("experiments/million_hour")
     base = pipe.stage_baseline()
     pipe.stage_teacher()
     targ = pipe.stage_targets()
@@ -49,6 +63,55 @@ def main():
           f"({stud['rel_fer_reduction_pct']}% relative)")
     print("\n(sub-epoch loss trace is the scaled Fig. 1; see "
           "benchmarks/tables.py for the full reproduction)")
+
+
+def run_elastic(n_waves):
+    print(f"== elastic waves: generate -> train -> promote x{n_waves}, "
+          f"one lane killed mid-wave ==")
+    pipe = _pipeline("experiments/million_hour_elastic")
+    base = pipe.stage_baseline()
+    pipe.stage_teacher()
+    rep = pipe.run_waves(n_waves, kill_at=1, revive_after=2)
+    for i, wv in enumerate(rep["waves"]):
+        s = wv["student"]
+        chaos = ", ".join(f"{e['event']} {e['worker']}@block{e['poll']}"
+                          for e in s["chaos"])
+        print(f"wave {i}: store wave {wv['wave']}, "
+              f"FER {s['val_fer']:.3f}, "
+              f"{s['resizes']['count']} resizes "
+              f"({s['resizes']['seconds']:.2f}s), "
+              f"final W={s['final_workers']}  [{chaos}]")
+    print(f"baseline FER {base['val_fer']:.3f} -> "
+          f"final student FER {rep['final_fer']:.3f} "
+          f"({rep['rel_fer_reduction_pct']}% relative)")
+    print(f"absorbed {rep['restarts_absorbed']} worker deaths across "
+          f"{rep['resize_count']} resizes "
+          f"({rep['resize_seconds']:.2f}s total)")
+    print(f"final manifest: verified {rep['n_verified']} shards "
+          f"(clean={rep['manifest_clean']}), "
+          f"gc removed {rep['gc_removed']} orphans, "
+          f"ledger done={rep['ledger_clean']}")
+    assert rep["manifest_clean"] and rep["ledger_clean"]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--elastic", action="store_true",
+                    help="run the continuous-wave driver with injected "
+                         "worker kills instead of the single-pass recipe")
+    ap.add_argument("--waves", type=int, default=2,
+                    help="number of generate->train->promote waves "
+                         "(--elastic only)")
+    args = ap.parse_args()
+
+    print("== the paper's 1M-hour schedule (structure) ==")
+    print(scheduled.describe(scheduled.ScheduleConfig.paper_1m()))
+    print()
+
+    if args.elastic:
+        run_elastic(args.waves)
+    else:
+        run_static()
 
 
 if __name__ == "__main__":

@@ -89,6 +89,22 @@ class CheckpointStore:
             raise FileNotFoundError(f"no checkpoints under {self.root}")
         return load_tree(self.path(step), like), step
 
+    def leaf_shapes(self, step: Optional[int] = None) -> Dict[str, tuple]:
+        """{leaf path: stored shape} without materializing the arrays.
+
+        The cross-W resume probe: a Trainer whose strategy was built at
+        W_cur can discover the membership a checkpoint was *saved* at
+        (leading dim of a worker-stacked leaf) before asking load_tree
+        for it — load_tree is strict about shapes by design, so the
+        caller must present a template already laid out for the saved W.
+        """
+        step = self.latest() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        z = np.load(self.path(step))
+        return {k[3:]: tuple(z[k].shape) for k in z.files
+                if k.startswith("t::")}
+
     def load_meta(self, step: int) -> Optional[dict]:
         meta = self.path(step) + ".meta.json"
         if not os.path.exists(meta):

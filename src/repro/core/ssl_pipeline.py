@@ -81,6 +81,15 @@ def am_configs(*, n_layers: int, lstm_hidden: int, n_senones: int,
     return base, teacher
 
 
+def _engine_from_ckpt(cfg, ckpt_dir: str, topk: int) -> TeacherRunner:
+    model = build_model(cfg)
+    like = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    like = jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), like)
+    params, _ = CheckpointStore(ckpt_dir).load(like)
+    return TeacherRunner(cfg, params, k=topk)
+
+
 def pipeline_teacher_engine(worker_id: int, kwargs: dict):
     """Engine factory spec ``repro.core.ssl_pipeline:
     pipeline_teacher_engine`` — a generation worker process rebuilds
@@ -92,12 +101,25 @@ def pipeline_teacher_engine(worker_id: int, kwargs: dict):
         lstm_hidden=int(kwargs["lstm_hidden"]),
         n_senones=int(kwargs["n_senones"]),
         feat_dim=int(kwargs["feat_dim"]))
-    model = build_model(teacher_cfg)
-    like = jax.eval_shape(lambda: model.init(jax.random.key(0)))
-    like = jax.tree_util.tree_map(
-        lambda s: jnp.zeros(s.shape, s.dtype), like)
-    params, _ = CheckpointStore(kwargs["ckpt_dir"]).load(like)
-    return TeacherRunner(teacher_cfg, params, k=int(kwargs["topk"]))
+    return _engine_from_ckpt(teacher_cfg, kwargs["ckpt_dir"],
+                             int(kwargs["topk"]))
+
+
+def pipeline_student_engine(worker_id: int, kwargs: dict):
+    """Engine factory spec ``repro.core.ssl_pipeline:
+    pipeline_student_engine`` — the *promoted student* as the
+    generation engine (iterative distillation: after a wave of
+    scheduled learning the student regenerates the targets for the
+    next wave).  Same kwargs as the teacher factory; the rebuilt config
+    is the student (unidirectional) architecture."""
+    del worker_id
+    student_cfg, _ = am_configs(
+        n_layers=int(kwargs["n_layers"]),
+        lstm_hidden=int(kwargs["lstm_hidden"]),
+        n_senones=int(kwargs["n_senones"]),
+        feat_dim=int(kwargs["feat_dim"]))
+    return _engine_from_ckpt(student_cfg, kwargs["ckpt_dir"],
+                             int(kwargs["topk"]))
 
 
 def _pad_time(batch: dict, t: int) -> dict:
@@ -335,16 +357,25 @@ class SSLPipeline:
         return build_denominator_graph([l for _, l, _ in pairs],
                                        self.pc.n_senones)
 
-    def stage_targets(self) -> Dict:
+    def stage_targets(self, *, promoted_stage: str = None) -> Dict:
         """Sharded generation through the data plane: the unlabeled
         corpus is partitioned across ``gen_workers`` ledgered shard
         ranges, one TeacherRunner (engine) per worker, into the
         manifest-backed LogitStore v2 — a killed run re-claims its
         unfinished ranges, a completed re-run supersedes the previous
-        wave atomically."""
+        wave atomically.  ``promoted_stage`` switches the engine from
+        the bidirectional teacher to that stage's *student* checkpoint
+        (iterative distillation: the wave driver promotes the student
+        to teacher between waves)."""
         pc = self.pc
-        tparams = self._load_or_none("teacher", self.teacher_cfg)
-        assert tparams is not None, "run stage teacher first"
+        if promoted_stage is None:
+            gen_cfg, ckpt_name = self.teacher_cfg, "teacher"
+            factory = "pipeline_teacher_engine"
+        else:
+            gen_cfg, ckpt_name = self.student_cfg, promoted_stage
+            factory = "pipeline_student_engine"
+        gparams = self._load_or_none(ckpt_name, gen_cfg)
+        assert gparams is not None, f"run stage {ckpt_name} first"
         store = LogitStoreV2(os.path.join(self.out, "logit_store"),
                              k=pc.topk, vocab=pc.n_senones)
         # host (numpy) batches: the jitted forward converts one batch at
@@ -354,13 +385,12 @@ class SSLPipeline:
                                           seed=7)]
 
         if pc.gen_procs >= 1:
-            # real OS processes: each rebuilds the teacher from the
+            # real OS processes: each rebuilds the engine from the
             # checkpoint (the factory spec crosses the process boundary;
             # params cannot) — manifest bitwise-identical to in-process
-            make_engine = ("repro.core.ssl_pipeline:"
-                           "pipeline_teacher_engine")
+            make_engine = f"repro.core.ssl_pipeline:{factory}"
             engine_kwargs = {
-                "ckpt_dir": os.path.join(self.out, "ckpt_teacher"),
+                "ckpt_dir": os.path.join(self.out, f"ckpt_{ckpt_name}"),
                 "n_layers": pc.n_layers, "lstm_hidden": pc.lstm_hidden,
                 "n_senones": pc.n_senones, "feat_dim": pc.feat_dim,
                 "topk": pc.topk}
@@ -368,7 +398,7 @@ class SSLPipeline:
             engine_kwargs = None
 
             def make_engine(worker: int):
-                return TeacherRunner(self.teacher_cfg, tparams, k=pc.topk)
+                return TeacherRunner(gen_cfg, gparams, k=pc.topk)
 
         report = generate_sharded(
             make_engine, batches, store, n_workers=pc.gen_workers,
@@ -385,6 +415,12 @@ class SSLPipeline:
         if pc.gen_procs >= 1:             # the fleet's completion report
             out.update({k: report[k] for k in ("processes", "restarts",
                                                "reclaimed")})
+            # structured steal/lifecycle events from the supervisor +
+            # ledger: who stole what from whom, by which signal, how old
+            events = report.get("events", [])
+            out["n_steals"] = sum(e.get("event") == "steal"
+                                  for e in events)
+            out["events"] = events[-20:]
         return out
 
     def _student_strategy(self):
@@ -394,11 +430,19 @@ class SSLPipeline:
                                        block_steps=pc.bmuf_block_steps))
         return GTC(GTCConfig(tau=pc.gtc_tau, n_workers=1))
 
-    def stage_student(self) -> Dict:
+    def stage_student(self, *, membership=None, init_params=None,
+                      stage: str = None) -> Dict:
         """Scheduled learning on unlabeled top-k targets + labeled
-        passes — same loop for both trainers; only the strategy differs."""
+        passes — same loop for both trainers; only the strategy differs.
+        ``membership`` (anything with ``live_count()``) makes the fit
+        elastic: worker deaths shrink the BMUF block at the next block
+        boundary, revivals grow it back.  ``init_params``/``stage``
+        let the wave driver chain waves (each wave trains from the
+        previous wave's promoted params under its own checkpoint
+        stage)."""
         pc = self.pc
-        baseline = self._load_or_none("baseline", self.student_cfg)
+        baseline = (init_params if init_params is not None
+                    else self._load_or_none("baseline", self.student_cfg))
         assert baseline is not None, "run stage baseline first"
         # the workers=1 consumer of whatever N workers generated: the
         # manifest is the contract — verify() checksums every live shard
@@ -413,10 +457,11 @@ class SSLPipeline:
             labeled_every=pc.labeled_every, chunked_until=pc.chunked_until,
             lr0=pc.lr, labeled_lr_boost=1.5)
 
+        stage = stage or f"student_{self.student_trainer}"
         model = build_model(self.student_cfg)
         sink = ListSink()
         tr = self._trainer(
-            f"student_{self.student_trainer}", self._student_strategy(),
+            stage, self._student_strategy(),
             {"distill_topk": make_loss_fn(model, self.student_cfg,
                                           "distill_topk"),
              "ce": make_loss_fn(model, self.student_cfg, "ce")}, sink)
@@ -438,10 +483,15 @@ class SSLPipeline:
                         offset=max(phase.feature_offset, 0)))
 
         state = tr.fit(state, scheduled_source(sched, unlabeled=unlabeled,
-                                               labeled=labeled))
+                                               labeled=labeled),
+                       membership=membership)
         tr.finalize(state)
-        self._ckpt(f"student_{self.student_trainer}").save(0, state.params)
-        return self._student_metrics(state.params, sink.values("loss"))
+        self._ckpt(stage).save(0, state.params)
+        out = self._student_metrics(state.params, sink.values("loss"))
+        if membership is not None:
+            out["resizes"] = dict(tr.resize_stats)
+            out["final_workers"] = getattr(tr.strategy, "n_workers", 1)
+        return out
 
     def _student_metrics(self, params, losses):
         fer = self.fer(self.student_cfg, params)
@@ -515,3 +565,91 @@ class SSLPipeline:
             out[s] = getattr(self, f"stage_{s}")()
             print(f"[pipeline] {s}: {out[s]}")
         return out
+
+    # ---------------------------------------------------------------- waves
+
+    def run_waves(self, n_waves: int = 2, *, kill_at: int = 1,
+                  revive_after: int = 2) -> Dict:
+        """Continuous elastic scheduled learning: generate -> train ->
+        promote, repeated, surviving injected worker deaths.
+
+        Wave 0 distills from the bidirectional teacher; every later
+        wave *regenerates* the targets with the previous wave's student
+        promoted to teacher (iterative distillation — "Exploiting
+        Large-scale Teacher-Student Training", PAPERS.md) through the
+        v2 store's atomic wave supersede.  Each wave's BMUF student fit
+        runs under a :class:`~repro.runtime.workers.TrainerMembership`
+        with a scripted :class:`~repro.runtime.workers.LaneCrashPlan`:
+        one lane is killed after block ``kill_at`` (the block average
+        shrinks to the survivors at the next sync) and revived
+        ``revive_after`` blocks later (warm rejoin — lanes are kept
+        broadcast-current exactly for this).  Requires the ``bmuf``
+        student trainer (the only one with worker-stacked state to be
+        elastic over).
+
+        Returns per-wave generation + student reports plus the final
+        health checks: manifest checksum-verified, superseded waves
+        garbage-collected, generation ledger fully done.
+        """
+        from repro.pipeline.generate import WorkLedger
+        from repro.runtime.workers import LaneCrashPlan, TrainerMembership
+
+        pc = self.pc
+        assert self.student_trainer == "bmuf", \
+            "elastic waves need the BMUF student trainer"
+        assert pc.bmuf_workers >= 2, "need >= 2 lanes to kill one"
+        assert self._load_or_none("baseline", self.student_cfg) \
+            is not None, "run stage baseline first"
+
+        membership = TrainerMembership(
+            os.path.join(self.out, "trainer_members.json"),
+            timeout_s=30.0)
+        lanes = [f"lane{i}" for i in range(pc.bmuf_workers)]
+
+        waves = []
+        prev_stage = None       # None -> the bilstm teacher generates
+        for w in range(n_waves):
+            gen = self.stage_targets(promoted_stage=prev_stage)
+            # every lane rejoins at the wave boundary (revived workers
+            # come back warm; the roster is the ground truth mid-wave)
+            for lane in lanes:
+                membership.join(lane)
+            victim = lanes[-1 - (w % (len(lanes) - 1))]  # rotate, keep lane0
+            plan = LaneCrashPlan(
+                membership,
+                kills={} if kill_at is None else {kill_at: victim},
+                revives={} if kill_at is None or revive_after is None
+                else {kill_at + revive_after: victim})
+            stage = f"student_wave{w}"
+            init = (None if prev_stage is None
+                    else self._load_or_none(prev_stage, self.student_cfg))
+            rep = self.stage_student(membership=plan, init_params=init,
+                                     stage=stage)
+            rep["chaos"] = plan.log
+            waves.append({"wave": gen["wave"], "gen": gen, "student": rep})
+            print(f"[waves] wave {w}: gen wave={gen['wave']} "
+                  f"fer={rep['val_fer']:.3f} resizes={rep['resizes']} "
+                  f"chaos={plan.log}")
+            prev_stage = stage  # student promoted to teacher
+
+        store = LogitStoreV2(os.path.join(self.out, "logit_store"),
+                             k=pc.topk, vocab=pc.n_senones)
+        n_verified = store.verify()
+        removed = store.gc()    # superseded waves leave no orphans
+        ledger_clean = WorkLedger.peek_all_done(
+            os.path.join(self.out, "gen_ledger.json"))
+        return {"n_waves": n_waves, "waves": waves,
+                "manifest_clean": True, "n_verified": n_verified,
+                "gc_removed": len(removed), "ledger_clean": ledger_clean,
+                "restarts_absorbed": sum(
+                    1 for wv in waves
+                    for e in wv["student"].get("chaos", [])
+                    if e.get("event") == "kill"),
+                "resize_count": sum(
+                    wv["student"]["resizes"]["count"] for wv in waves),
+                "resize_seconds": round(sum(
+                    wv["student"]["resizes"]["seconds"] for wv in waves),
+                    3),
+                "final_fer": waves[-1]["student"]["val_fer"],
+                "rel_fer_reduction_pct":
+                    waves[-1]["student"]["rel_fer_reduction_pct"]}

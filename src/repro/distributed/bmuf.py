@@ -51,11 +51,39 @@ def bmuf_init(global_params, cfg: BMUFConfig):
     return {"theta_g": global_params, "delta": delta, "workers": workers}
 
 
-def block_sync(state, cfg: BMUFConfig, *, mean_fn=None):
+def active_mean_fn(active):
+    """Worker-mean over live lanes only: ``active`` is a (W,) 0/1 mask.
+
+    Dead lanes contribute nothing to the block average; the divisor is
+    the live count (floored at 1 so an all-dead mask degrades to a
+    frozen model instead of NaNs).  The block-momentum ``delta`` is
+    global, not per-worker, so it needs no masking — it carries
+    unchanged across a membership change, which is what the
+    shrink-mid-run-vs-fresh-W pin relies on.
+    """
+    a = jnp.asarray(active, jnp.float32)
+    denom = jnp.maximum(jnp.sum(a), 1.0)
+
+    def mean_fn(w):
+        aw = a.reshape((-1,) + (1,) * (w.ndim - 1))
+        return jnp.sum(w.astype(jnp.float32) * aw, axis=0) / denom
+
+    return mean_fn
+
+
+def block_sync(state, cfg: BMUFConfig, *, mean_fn=None, active=None):
     """One BMUF sync. ``mean_fn`` overrides the worker-mean (shard_map path
-    passes a lax.pmean closure); default = mean over the leading W dim."""
+    passes a lax.pmean closure); default = mean over the leading W dim.
+    ``active`` (a (W,) 0/1 mask, ignored when ``mean_fn`` is given)
+    restricts the average to live workers — the elastic-membership hook.
+    The Nesterov restart still broadcasts to *all* lanes, so a dead
+    lane holds current params and can rejoin warm by flipping its mask
+    bit back on."""
     if mean_fn is None:
-        mean_fn = lambda w: jnp.mean(w.astype(jnp.float32), axis=0)
+        if active is not None:
+            mean_fn = active_mean_fn(active)
+        else:
+            mean_fn = lambda w: jnp.mean(w.astype(jnp.float32), axis=0)
     theta_g, delta = state["theta_g"], state["delta"]
     wbar = tmap(mean_fn, state["workers"])
     g = tmap(lambda wb, tg: wb - tg.astype(jnp.float32), wbar, theta_g)
@@ -113,8 +141,11 @@ def make_bmuf_block_step(train_step: Callable, cfg: BMUFConfig):
     (tau, W, ...).  ``rng`` (optional trailing argument of the returned
     block) is a per-block key folded per (worker, tau-step) and threaded
     into steps that declare it — legacy 4-argument calls are unchanged.
+    ``active`` (optional (W,) 0/1 mask) drops dead lanes from the block
+    average: their local steps still run (vmap lanes are free and keep
+    shapes static) but contribute nothing to the sync.
     """
-    def block(state, opt_states, batches, lr, rng=None):
+    def block(state, opt_states, batches, lr, rng=None, active=None):
         local_tau = _make_local_tau(train_step, lr, rng)
         if rng is None:
             workers, opt_states, metrics = jax.vmap(
@@ -127,7 +158,7 @@ def make_bmuf_block_step(train_step: Callable, cfg: BMUFConfig):
                 local_tau, in_axes=(0, 0, 1, 0))(state["workers"],
                                                  opt_states, batches, wkeys)
         state = dict(state, workers=workers)
-        state = block_sync(state, cfg)
+        state = block_sync(state, cfg, active=active)
         return state, opt_states, metrics
 
     return block
@@ -154,9 +185,14 @@ def make_sharded_bmuf_block_step(train_step: Callable, cfg: BMUFConfig,
     from repro.utils.introspect import takes_rng as _takes
     takes_rng = _takes(train_step)
 
-    def block(state, opt_states, batches, lr, rng=None):
+    def block(state, opt_states, batches, lr, rng=None, active=None):
+        have_rng = rng is not None
+        have_act = active is not None
+
         def shard_body(workers, opt_states, batches, lr, theta_g, delta,
-                       wkey_data):
+                       *extra):
+            wkey_data = extra[0] if have_rng else None
+            act = extra[int(have_rng)] if have_act else None
             def local_tau(params, opt_state, bt, wkd):
                 def one(carry, xs):
                     p, o = carry
@@ -181,10 +217,21 @@ def make_sharded_bmuf_block_step(train_step: Callable, cfg: BMUFConfig,
                 workers, opt_states, metrics = jax.vmap(
                     local_tau, in_axes=(0, 0, 1, 0))(
                         workers, opt_states, batches, wkey_data)
-            # block sync: mean over the local W slice, then over the axis
-            def wmean(w):
-                local = jnp.mean(w.astype(jnp.float32), axis=0)
-                return jax.lax.pmean(local, ax)
+            # block sync: mean over the local W slice, then over the axis.
+            # With a mask: psum of masked local sums / psum'd live count —
+            # each shard contributes only its live lanes.
+            if act is None:
+                def wmean(w):
+                    local = jnp.mean(w.astype(jnp.float32), axis=0)
+                    return jax.lax.pmean(local, ax)
+            else:
+                a = act.astype(jnp.float32)
+                denom = jnp.maximum(jax.lax.psum(jnp.sum(a), ax), 1.0)
+
+                def wmean(w):
+                    aw = a.reshape((-1,) + (1,) * (w.ndim - 1))
+                    s = jnp.sum(w.astype(jnp.float32) * aw, axis=0)
+                    return jax.lax.psum(s, ax) / denom
             wbar = tmap(wmean, workers)
             g = tmap(lambda wb, tg: wb - tg.astype(jnp.float32), wbar,
                      theta_g)
@@ -205,19 +252,11 @@ def make_sharded_bmuf_block_step(train_step: Callable, cfg: BMUFConfig,
 
         wspec = P(ax)       # leading worker dim sharded
         rspec = P()         # theta_g / delta / lr replicated
-        if rng is None:
-            fn = shard_map(
-                lambda w, o, b, l, tg, d: shard_body(w, o, b, l, tg, d,
-                                                     None),
-                mesh=mesh,
-                in_specs=(wspec, wspec, P(None, ax), rspec, rspec, rspec),
-                out_specs=(wspec, wspec, P(None, ax), rspec, rspec),
-                check_rep=False)
-            workers, opt_states, metrics, theta_g, delta = fn(
-                state["workers"], opt_states, batches,
+        in_specs = [wspec, wspec, P(None, ax), rspec, rspec, rspec]
+        args = [state["workers"], opt_states, batches,
                 jnp.asarray(lr, jnp.float32), state["theta_g"],
-                state["delta"])
-        else:
+                state["delta"]]
+        if have_rng:
             # per-worker keys are folded OUTSIDE shard_map with the
             # *global* worker index, so the sharded path stays bitwise
             # equal to the vmap path; raw key data crosses the shard_map
@@ -225,16 +264,17 @@ def make_sharded_bmuf_block_step(train_step: Callable, cfg: BMUFConfig,
             # don't mix on every jax version) and is re-wrapped inside
             wkd = jax.vmap(lambda i: jax.random.key_data(
                 jax.random.fold_in(rng, i)))(jnp.arange(cfg.n_workers))
-            fn = shard_map(
-                shard_body, mesh=mesh,
-                in_specs=(wspec, wspec, P(None, ax), rspec, rspec, rspec,
-                          wspec),
-                out_specs=(wspec, wspec, P(None, ax), rspec, rspec),
-                check_rep=False)
-            workers, opt_states, metrics, theta_g, delta = fn(
-                state["workers"], opt_states, batches,
-                jnp.asarray(lr, jnp.float32), state["theta_g"],
-                state["delta"], wkd)
+            in_specs.append(wspec)
+            args.append(wkd)
+        if have_act:
+            in_specs.append(wspec)
+            args.append(jnp.asarray(active, jnp.float32))
+        fn = shard_map(
+            shard_body, mesh=mesh,
+            in_specs=tuple(in_specs),
+            out_specs=(wspec, wspec, P(None, ax), rspec, rspec),
+            check_rep=False)
+        workers, opt_states, metrics, theta_g, delta = fn(*args)
         return ({"theta_g": theta_g, "delta": delta, "workers": workers},
                 opt_states, metrics)
 

@@ -1,8 +1,8 @@
 from repro.optim.sgd import (adam_init, adam_update, clip_by_global_norm,
                              momentum_init, momentum_update)
 from repro.optim.schedules import (Schedule, exponential_decay,
-                                   warmup_exponential)
+                                   warmup_exponential, warmup_hold_decay)
 
 __all__ = ["momentum_init", "momentum_update", "adam_init", "adam_update",
            "clip_by_global_norm", "Schedule", "exponential_decay",
-           "warmup_exponential"]
+           "warmup_exponential", "warmup_hold_decay"]

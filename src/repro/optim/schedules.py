@@ -57,3 +57,28 @@ def warmup_exponential(lr0: float, warmup_steps: int, decay: float,
         return lr0 * warm * (decay ** epoch)
     return Schedule(fn, f"warmup_exp(lr0={lr0}, warmup={warmup_steps}, "
                         f"decay={decay}, spe={steps_per_epoch})")
+
+
+def warmup_hold_decay(lr0: float, warmup_steps: int, hold_steps: int,
+                      decay: float, steps_per_epoch: int, *,
+                      floor: float = 0.0) -> Schedule:
+    """Linear warmup -> flat hold at lr0 -> per-epoch exponential decay.
+
+    The long-horizon wave driver's shape: ramp in over ``warmup_steps``
+    updates, hold the peak for ``hold_steps`` more (the bulk-data
+    regime, where decaying early wastes the unlabeled firehose), then
+    decay by ``decay`` per ``steps_per_epoch`` updates, clamped at
+    ``floor``.  Evaluated at the update counter like every Schedule —
+    still a host-side float into the traced lr argument, so an entire
+    warmup-hold-decay sweep reuses one compiled update (the 1-compile
+    pin extends to this shape in tests/test_trainer.py).
+    """
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (s + 1) / max(warmup_steps, 1))
+        past_hold = jnp.maximum(0.0, s - warmup_steps - hold_steps)
+        epoch = jnp.floor(past_hold / steps_per_epoch)
+        return jnp.maximum(floor, lr0 * warm * (decay ** epoch))
+    return Schedule(fn, f"warmup_hold_decay(lr0={lr0}, "
+                        f"warmup={warmup_steps}, hold={hold_steps}, "
+                        f"decay={decay}, spe={steps_per_epoch})")

@@ -92,6 +92,9 @@ class WorkLedger:
         self.path = path
         self.ranges = ranges
         self.wave = wave
+        # structured steal log (this process's sweeps only — events are
+        # observability, not shared state; see reclaim_stale)
+        self.events: List[dict] = []
 
     # ------------------------------------------------------------ open/io
 
@@ -232,19 +235,31 @@ class WorkLedger:
 
     def reclaim_stale(self, *, max_age_s: float,
                       owners: Optional[Sequence[str]] = None,
-                      now: Optional[float] = None) -> List[WorkRange]:
+                      now: Optional[float] = None,
+                      claim_timeout_s: Optional[float] = None
+                      ) -> List[WorkRange]:
         """Steal claims from quiet owners (the heartbeat-age contract).
 
         A claimed range demotes back to pending when its owner's
         heartbeat file is older than ``max_age_s`` — or was never
         written, with the claim itself older than ``max_age_s`` (died
-        before the first beat).  ``owners`` narrows the sweep to known
+        before the first beat).  ``claim_timeout_s`` adds a second
+        staleness signal: the claim's *own* age.  A worker whose beat
+        thread outlives its hung main loop (it died between beat and
+        claim progress) keeps a fresh heartbeat forever and the
+        heartbeat path alone never steals from it; with a claim timeout
+        the claim is stolen by age regardless.  Safe because done
+        transitions are idempotent — a resurrected owner finishing a
+        stolen range is a no-op.  ``owners`` narrows the sweep to known
         casualties (the supervisor passes a dead child's owner id for
         immediate reclaim without waiting out the heartbeat timeout).
-        Returns the ranges stolen.
+        Returns the ranges stolen; each steal is also appended to
+        ``self.events`` as a structured record (who stole what from
+        whom, which signal fired, how old).
         """
         now = time.time() if now is None else now
         stolen: List[WorkRange] = []
+        events: List[dict] = []
         with file_lock(self.lock_path):
             self._reload()
             for r in self.ranges:
@@ -253,18 +268,34 @@ class WorkLedger:
                 if owners is not None:
                     if r.owner not in owners:
                         continue
+                    mode, age = "owner", None
                 else:
                     age = heartbeat_age(self.heartbeat_dir, r.owner,
                                         now=now)
                     if age is None:         # never beat: age the claim
                         age = now - (r.claim_ts or 0.0)
+                        mode = "never_beat"
+                    else:
+                        mode = "hb_age"
                     if age <= max_age_s:
-                        continue
+                        claim_age = (None if r.claim_ts is None
+                                     else now - r.claim_ts)
+                        if (claim_timeout_s is not None
+                                and claim_age is not None
+                                and claim_age > claim_timeout_s):
+                            mode, age = "claim_age", claim_age
+                        else:
+                            continue
                 stolen.append(WorkRange(r.lo, r.hi, "claimed", r.owner,
                                         r.claim_ts))
+                events.append({"event": "steal", "lo": r.lo, "hi": r.hi,
+                               "from": r.owner, "mode": mode,
+                               "age_s": None if age is None
+                               else round(float(age), 3), "t": now})
                 r.status, r.owner, r.claim_ts = "pending", None, None
             if stolen:
                 self._save()
+        self.events.extend(events)
         return stolen
 
     def refresh(self):

@@ -41,6 +41,8 @@ _LAZY = {
     "Supervisor": "repro.runtime.workers",
     "run_supervised_generation": "repro.runtime.workers",
     "linear_probe_engine": "repro.runtime.workers",
+    "TrainerMembership": "repro.runtime.workers",
+    "LaneCrashPlan": "repro.runtime.workers",
 }
 
 __all__ = sorted(_LAZY)

@@ -193,12 +193,17 @@ class Supervisor:
     def __init__(self, spec_path: str, n_procs: int, *,
                  heartbeat_timeout_s: float = 3.0, poll_s: float = 0.05,
                  max_restarts: Optional[int] = None,
+                 claim_timeout_s: Optional[float] = None,
                  python: str = sys.executable):
         self.spec_path = spec_path
         self.n_procs = n_procs
         self.heartbeat_timeout_s = heartbeat_timeout_s
         self.poll_s = poll_s
         self.max_restarts = n_procs if max_restarts is None else max_restarts
+        # second staleness signal: a claim held longer than this is
+        # stolen even under a fresh heartbeat (zombie worker whose beat
+        # thread outlived its hung main loop); None disables
+        self.claim_timeout_s = claim_timeout_s
         self.python = python
         with open(spec_path) as f:
             self.spec = json.load(f)
@@ -207,6 +212,9 @@ class Supervisor:
         self.child_owner: Dict[int, str] = {}
         self.n_restarts = 0
         self.n_reclaimed = 0
+        # structured lifecycle log (spawn/exit/respawn), merged with the
+        # ledger's steal events into run()'s report
+        self.events: List[dict] = []
 
     # ------------------------------------------------------------ spawn
 
@@ -218,6 +226,9 @@ class Supervisor:
             stderr=subprocess.DEVNULL)
         self.children[worker_id] = p
         self.child_owner[worker_id] = owner_name(worker_id, p.pid)
+        self.events.append({"event": "spawn", "worker": worker_id,
+                            "owner": self.child_owner[worker_id],
+                            "t": time.time()})
         return p
 
     def _reap_and_respawn(self):
@@ -229,6 +240,10 @@ class Supervisor:
             stolen = self.ledger.reclaim_stale(
                 max_age_s=0.0, owners=[owner])
             self.n_reclaimed += len(stolen)
+            self.events.append({"event": "exit", "worker": wid,
+                                "owner": owner,
+                                "returncode": p.returncode,
+                                "stolen": len(stolen), "t": time.time()})
             self.ledger.refresh()
             if (not self.ledger.all_done
                     and self.n_restarts < self.max_restarts
@@ -236,6 +251,8 @@ class Supervisor:
                 # nonzero exit or died holding work: spawn a successor
                 # (a clean exit with nothing stolen is just "done")
                 self.n_restarts += 1
+                self.events.append({"event": "respawn", "worker": wid,
+                                    "t": time.time()})
                 self._spawn(wid)
 
     # -------------------------------------------------------------- run
@@ -261,14 +278,16 @@ class Supervisor:
                             "all workers dead, restart budget exhausted, "
                             "work pending")
                 stolen = self.ledger.reclaim_stale(
-                    max_age_s=self.heartbeat_timeout_s)
+                    max_age_s=self.heartbeat_timeout_s,
+                    claim_timeout_s=self.claim_timeout_s)
                 self.n_reclaimed += len(stolen)
                 time.sleep(self.poll_s)
             self._drain()
         finally:
             self._terminate_all()
         return {"processes": self.n_procs, "restarts": self.n_restarts,
-                "reclaimed": self.n_reclaimed}
+                "reclaimed": self.n_reclaimed,
+                "events": self.events + self.ledger.events}
 
     def _drain(self, grace_s: float = 5.0):
         """Ledger complete: workers are exiting on their own — give
@@ -293,7 +312,9 @@ def run_supervised_generation(ledger: WorkLedger, batches, store, *,
                               n_procs: int, crash: Optional[dict] = None,
                               heartbeat_timeout_s: float = 3.0,
                               timeout_s: float = 120.0,
-                              max_restarts: Optional[int] = None) -> Dict:
+                              max_restarts: Optional[int] = None,
+                              claim_timeout_s: Optional[float] = None
+                              ) -> Dict:
     """``generate_sharded(processes=N)``'s backend: stage the job under
     ``<store>/_procs/``, run a Supervisor over the prepared ledger, and
     hand back a completion report.  The ledger/wave decisions were
@@ -307,7 +328,8 @@ def run_supervised_generation(ledger: WorkLedger, batches, store, *,
         engine_spec=engine_spec, engine_kwargs=engine_kwargs, crash=crash)
     sup = Supervisor(spec_path, n_procs,
                      heartbeat_timeout_s=heartbeat_timeout_s,
-                     max_restarts=max_restarts)
+                     max_restarts=max_restarts,
+                     claim_timeout_s=claim_timeout_s)
     rep = sup.run(timeout_s=timeout_s)
     # adopt the workers' commits: the in-memory manifest predates them
     store.manifest = type(store.manifest).load(store.root)
@@ -386,6 +408,155 @@ def teacher_engine(worker_id: int, kwargs: dict):
     params, _step = CheckpointStore(kwargs["ckpt_dir"]).load(
         like, kwargs.get("step"))
     return TeacherRunner(cfg, params, k=int(kwargs.get("k", 20)))
+
+
+# ------------------------------------------------------ trainer membership
+
+class TrainerMembership:
+    """Shared membership roster for elastic trainers.
+
+    The generation fleet's liveness machinery (``procs`` heartbeats +
+    ``file_lock``) extended to *training* workers: a locked JSON roster
+    records who joined/left, heartbeat files prove who is still alive,
+    and ``live_count()`` is the runtime W the Trainer polls at block
+    boundaries (``Trainer.fit(membership=...)``).  Multiple processes —
+    or one driver simulating a fleet — share the same roster file.
+
+        m = TrainerMembership(path, timeout_s=3.0)
+        m.join("lane0"); m.join("lane1")
+        m.live()          # ["lane0", "lane1"]
+        m.kill("lane1")   # simulated SIGKILL: backdate the heartbeat
+        m.live_count()    # 1 -> the next block shrinks to W=1
+
+    A member is live iff it joined, has not left, and its heartbeat is
+    no older than ``timeout_s``.  ``join`` is also the *re*-join path —
+    a revived worker rejoins warm (BMUF lanes were kept broadcast-
+    current exactly so this is cheap).
+    """
+
+    def __init__(self, path: str, *, timeout_s: float = 3.0,
+                 interval_s: float = 0.25):
+        self.path = path
+        self.timeout_s = timeout_s
+        self.interval_s = interval_s
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+
+    @property
+    def lock_path(self) -> str:
+        return self.path + ".lock"
+
+    @property
+    def heartbeat_dir(self) -> str:
+        return os.path.join(os.path.dirname(self.path) or ".",
+                            "trainer_heartbeats")
+
+    def _load(self) -> Dict:
+        try:
+            with open(self.path) as f:
+                return json.load(f)
+        except (OSError, ValueError):
+            return {"workers": {}}
+
+    def _save(self, d: Dict):
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(d, f, indent=1)
+        os.replace(tmp, self.path)
+
+    # -------------------------------------------------------- transitions
+
+    def join(self, worker: str):
+        """Register (or re-register) a live worker; beats synchronously
+        so the member is live the moment join returns."""
+        with procs.file_lock(self.lock_path):
+            d = self._load()
+            d["workers"][worker] = {"joined": time.time(), "left": None}
+            self._save(d)
+        procs.beat(self.heartbeat_dir, worker)
+
+    def leave(self, worker: str):
+        """Clean departure — immediately not-live, no timeout to wait."""
+        with procs.file_lock(self.lock_path):
+            d = self._load()
+            if worker in d["workers"]:
+                d["workers"][worker]["left"] = time.time()
+                self._save(d)
+
+    def beat(self, worker: str):
+        procs.beat(self.heartbeat_dir, worker)
+
+    def heartbeat(self, worker: str) -> procs.Heartbeat:
+        """Background beat thread for a real trainer process."""
+        return procs.Heartbeat(self.heartbeat_dir, worker,
+                               interval_s=self.interval_s)
+
+    def kill(self, worker: str, *, age_s: Optional[float] = None):
+        """Fault injection: make a member look SIGKILLed *now* by
+        backdating its heartbeat past the timeout — no sleeping in
+        tests, same observable state as a real dead process."""
+        age = self.timeout_s + 1.0 if age_s is None else age_s
+        hb = procs.heartbeat_path(self.heartbeat_dir, worker)
+        if not os.path.exists(hb):
+            procs.beat(self.heartbeat_dir, worker)
+        then = time.time() - age
+        os.utime(hb, (then, then))
+
+    # ------------------------------------------------------------ queries
+
+    def roster(self) -> Dict:
+        with procs.file_lock(self.lock_path):
+            return self._load()["workers"]
+
+    def live(self, *, now: Optional[float] = None) -> List[str]:
+        now = time.time() if now is None else now
+        out = []
+        for name, rec in sorted(self.roster().items()):
+            if rec.get("left") is not None:
+                continue
+            age = procs.heartbeat_age(self.heartbeat_dir, name, now=now)
+            if age is not None and age <= self.timeout_s:
+                out.append(name)
+        return out
+
+    def live_count(self) -> int:
+        return len(self.live())
+
+
+class LaneCrashPlan:
+    """CrashPoint's deterministic after-N discipline, for membership.
+
+    Wraps a :class:`TrainerMembership` as the object ``Trainer.fit``
+    polls, firing scripted kills/revives at exact poll indices (one
+    poll per update, i.e. per BMUF block) — chaos tests stay exactly
+    reproducible: "kill lane2 after block 2, revive it after block 5".
+
+        plan = LaneCrashPlan(m, kills={2: "lane2"}, revives={5: "lane2"})
+        trainer.fit(state, source, membership=plan)
+
+    ``log`` records every fired event for the bench/report.
+    """
+
+    def __init__(self, membership: TrainerMembership, *,
+                 kills: Optional[Dict[int, str]] = None,
+                 revives: Optional[Dict[int, str]] = None):
+        self.membership = membership
+        self.kills = dict(kills or {})
+        self.revives = dict(revives or {})
+        self.polls = 0
+        self.log: List[dict] = []
+
+    def live_count(self) -> int:
+        n = self.polls
+        self.polls += 1
+        if n in self.kills:
+            self.membership.kill(self.kills[n])
+            self.log.append({"event": "kill", "poll": n,
+                             "worker": self.kills[n]})
+        if n in self.revives:
+            self.membership.join(self.revives[n])
+            self.log.append({"event": "revive", "poll": n,
+                             "worker": self.revives[n]})
+        return self.membership.live_count()
 
 
 if __name__ == "__main__":

@@ -20,7 +20,7 @@ from repro.train.data import (DataSource, TrainBatch, chain,
                               scheduled_source)
 from repro.train.metrics import (JsonlSink, ListSink, MetricsSink,
                                  TeeSink)
-from repro.train.state import TrainState
+from repro.train.state import TrainState, restack_workers
 from repro.train.strategies import (GTC, BMUFShardMap, BMUFVmap,
                                     DistributedStrategy, GTCShardMap,
                                     Local, init_opt, make_sgd_step)
@@ -30,7 +30,7 @@ __all__ = [
     "TrainState", "Trainer", "TrainBatch", "DataSource",
     "DistributedStrategy", "Local", "BMUFVmap", "BMUFShardMap", "GTC",
     "GTCShardMap",
-    "make_sgd_step", "init_opt",
+    "make_sgd_step", "init_opt", "restack_workers",
     "epoch_source", "distill_shard_source", "scheduled_source", "chain",
     "PrefetchingSource", "Schedule",
     "MetricsSink", "ListSink", "JsonlSink", "TeeSink",

@@ -22,6 +22,56 @@ import jax
 import jax.numpy as jnp
 
 
+def restack_workers(tree, w_new: int, *, fold: bool = False):
+    """Re-partition a W-stacked pytree onto a new leading worker dim.
+
+    The elastic-membership primitive every strategy ``resize`` builds
+    on.  Shrink (``w_new < W``): the first ``w_new`` rows survive; with
+    ``fold=True`` the dropped rows are scatter-added onto the survivors
+    round-robin (row ``j`` onto row ``j % w_new``) so the leading-dim
+    *sum* is preserved — the GTC error-feedback residuals' conservation
+    invariant (sum of sends + residuals == sum of grads) must hold
+    across a membership change, so a dead worker's unshipped error mass
+    moves to a survivor instead of vanishing.  Grow (``w_new > W``):
+    new rows are zeros under ``fold`` (a joiner starts with no residual
+    debt — again sum-preserving) and broadcasts of row 0 otherwise (a
+    BMUF joiner warm-starts from a survivor's replica/optimizer state).
+    """
+    if w_new < 1:
+        raise ValueError(f"w_new must be >= 1, got {w_new}")
+
+    def leaf(x):
+        x = jnp.asarray(x)
+        w = x.shape[0]
+        if w_new == w:
+            return x
+        if w_new < w:
+            head = x[:w_new]
+            if not fold:
+                return head
+            extra = x[w_new:]
+            idx = jnp.arange(w - w_new) % w_new
+            return head.at[idx].add(extra.astype(head.dtype))
+        if fold:
+            pad = jnp.zeros((w_new - w,) + x.shape[1:], x.dtype)
+        else:
+            pad = jnp.broadcast_to(x[0], (w_new - w,) + x.shape[1:])
+        return jnp.concatenate([x, pad], axis=0)
+
+    return jax.tree_util.tree_map(leaf, tree)
+
+
+def worker_dim(tree) -> int:
+    """Leading dim of the first leaf — the W a stacked tree is laid out
+    for (0 for an empty tree).  Used to sanity-check resizes and to
+    infer the saved worker count of legacy checkpoints without meta."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return 0
+    shape = getattr(leaves[0], "shape", ())
+    return int(shape[0]) if shape else 0
+
+
 @jax.tree_util.register_dataclass
 @dataclass
 class TrainState:

@@ -21,15 +21,23 @@ A strategy exposes:
 
   microbatches          how many source batches one update consumes
                         (1 for Local/GTC; tau*W for BMUF)
+  n_workers             the *current* worker membership W — a runtime
+                        value, not a construction-time constant
   stack(group)          fold that many batches into the update's input
   init_opt(params)      optimizer state (worker-stacked for BMUF)
   init_state(params)    strategy-private state carried in TrainState
   make_update(loss_fn)  (TrainState, batch, lr) -> (TrainState, metrics)
                         — pure and jittable, lr a traced scalar so one
                         compile serves every LR-schedule phase
+  resize(state, W_new)  re-partition W-stacked state onto a new
+                        membership (elastic join/leave, cross-W resume);
+                        returns the adjusted TrainState and retunes the
+                        strategy so subsequent make_update calls build
+                        W_new-shaped executables
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Callable, Dict, List, Protocol, runtime_checkable
 
 import jax
@@ -39,7 +47,7 @@ from repro.distributed import bmuf as bmuf_lib
 from repro.distributed import gtc as gtc_lib
 from repro.optim import (adam_init, adam_update, clip_by_global_norm,
                          momentum_init, momentum_update)
-from repro.train.state import TrainState
+from repro.train.state import TrainState, restack_workers
 from repro.utils.introspect import takes_rng
 
 tmap = jax.tree_util.tree_map
@@ -94,14 +102,31 @@ def init_opt(params, optimizer: str = "momentum"):
 @runtime_checkable
 class DistributedStrategy(Protocol):
     microbatches: int
+    n_workers: int
 
     def init_opt(self, params) -> Any: ...
     def init_state(self, params) -> Any: ...
     def stack(self, group: List[dict]) -> Any: ...
     def make_update(self, loss_fn: Callable) -> Callable: ...
+    def resize(self, state: "TrainState", w_new: int) -> "TrainState": ...
 
 
-class Local:
+class _SingleWorker:
+    """resize() for the strategies with no worker-stacked state: the
+    only membership they can express is W=1, so any other target is a
+    caller error, not something to silently absorb."""
+
+    n_workers = 1
+
+    def resize(self, state: TrainState, w_new: int) -> TrainState:
+        if w_new != 1:
+            raise ValueError(
+                f"{type(self).__name__} is single-worker; cannot resize "
+                f"to W={w_new}")
+        return state
+
+
+class Local(_SingleWorker):
     """Plain single-worker training — the degenerate strategy."""
 
     microbatches = 1
@@ -136,7 +161,7 @@ class Local:
         return update
 
 
-class GTC:
+class GTC(_SingleWorker):
     """Threshold-compressed SGD with error feedback (Strom 2015).
 
     Single-process form: grads are compressed against the carried
@@ -232,11 +257,32 @@ class GTCShardMap:
     def microbatches(self) -> int:
         return self.cfg.n_workers
 
+    @property
+    def n_workers(self) -> int:
+        return self.cfg.n_workers
+
     def init_opt(self, params):
         return init_opt(params, self.optimizer)
 
     def init_state(self, params):
         return gtc_lib.gtc_init(params, self.cfg)
+
+    def resize(self, state: TrainState, w_new: int) -> TrainState:
+        """Re-partition the per-worker error-feedback residuals onto a
+        new membership.  fold=True: a dropped worker's unshipped error
+        mass is scatter-added onto a survivor, a joiner starts with zero
+        residual — both sum-preserving, so the conservation invariant
+        (sum of sends + final residuals == sum of grads) holds across
+        the resize; pinned in tests.  The mesh is rebuilt for the new W
+        when this strategy owns a plain 1-axis worker mesh."""
+        if w_new == self.cfg.n_workers:
+            return state
+        self.cfg = dataclasses.replace(self.cfg, n_workers=w_new)
+        if len(self.worker_axes) == 1:
+            from repro.runtime.cluster import worker_mesh
+            self.mesh = worker_mesh(w_new, axis=self.worker_axes[0])
+        return state.replace(strategy_state=restack_workers(
+            state.strategy_state, w_new, fold=True))
 
     def place(self, state: TrainState) -> TrainState:
         """Lay a (fresh or resumed) TrainState out on the mesh the way
@@ -323,6 +369,29 @@ class _BMUFBase:
     def microbatches(self) -> int:
         return self.cfg.block_steps * self.cfg.n_workers
 
+    @property
+    def n_workers(self) -> int:
+        return self.cfg.n_workers
+
+    def resize(self, state: TrainState, w_new: int) -> TrainState:
+        """Re-stack worker replicas + per-worker optimizer state onto a
+        new membership.  Safe at block boundaries (the only place the
+        Trainer calls it): the Nesterov restart has just broadcast
+        identical params to every lane, so shrink keeps the first W_new
+        replicas and grow warm-starts joiners from lane 0 — both exact.
+        The block-momentum ``delta`` is global and carries unchanged,
+        which is why a shrink-mid-run matches a fresh smaller-W run
+        only to float32-ULP (the momentum history differs from a
+        cold start) — pinned in tests."""
+        if w_new == self.cfg.n_workers:
+            return state
+        self.cfg = dataclasses.replace(self.cfg, n_workers=w_new)
+        ss = dict(state.strategy_state)
+        ss["workers"] = restack_workers(ss["workers"], w_new)
+        return state.replace(
+            opt_state=restack_workers(state.opt_state, w_new),
+            strategy_state=ss)
+
     def init_opt(self, params):
         one = init_opt(params, self.optimizer)
         return tmap(lambda x: jnp.broadcast_to(
@@ -378,6 +447,15 @@ class BMUFShardMap(_BMUFBase):
         super().__init__(cfg, optimizer=optimizer, clip=clip)
         self.mesh = mesh
         self.worker_axes = worker_axes
+
+    def resize(self, state: TrainState, w_new: int) -> TrainState:
+        if w_new == self.cfg.n_workers:
+            return state
+        state = super().resize(state, w_new)
+        if len(self.worker_axes) == 1:
+            from repro.runtime.cluster import worker_mesh
+            self.mesh = worker_mesh(w_new, axis=self.worker_axes[0])
+        return state
 
     def _block(self, loss_fn):
         step = make_sgd_step(loss_fn, optimizer=self.optimizer,

@@ -29,9 +29,18 @@ counter on the host and fed through the same traced lr argument.
 ``prefetch=N`` (constructor or fit kwarg) wraps the source in
 ``repro.pipeline.PrefetchingSource`` so shard decode + device_put run
 ahead of the jitted update.
+
+Elasticity: ``fit(..., membership=...)`` polls a live-worker count at
+update (== BMUF block) boundaries; when it changes, ``Trainer.resize``
+re-partitions the TrainState through the strategy's ``resize`` hook and
+rebuilds the jitted updates for the new W.  Checkpoints record the
+membership they were saved at (``meta["n_workers"]``), and resume at a
+*different* W re-partitions the loaded state — a W=4 save restarts
+cleanly on a W=2 fleet.
 """
 from __future__ import annotations
 
+import time
 from typing import Callable, Dict, Optional, Union
 
 import jax
@@ -60,8 +69,10 @@ class Trainer:
         self.strategy = strategy
         if callable(loss_fns):
             loss_fns = {"default": loss_fns}
-        self.updates = {tag: jax.jit(strategy.make_update(fn))
-                        for tag, fn in loss_fns.items()}
+        self._loss_fns = loss_fns
+        self._build_updates()
+        # membership-change accounting, read by the elastic bench
+        self.resize_stats = {"count": 0, "seconds": 0.0}
         self.checkpoint = checkpoint
         self.ckpt_every = ckpt_every
         self.metrics = metrics
@@ -69,6 +80,10 @@ class Trainer:
         # that depth — decode + device_put run ahead on a host thread so
         # the jitted update never blocks on shard reads (repro.pipeline)
         self.prefetch = prefetch
+
+    def _build_updates(self):
+        self.updates = {tag: jax.jit(self.strategy.make_update(fn))
+                        for tag, fn in self._loss_fns.items()}
 
     # ------------------------------------------------------------- state
 
@@ -87,19 +102,56 @@ class Trainer:
         place = getattr(self.strategy, "place", None)
         return state if place is None else place(state)
 
+    def resize(self, state: TrainState, w_new: int) -> TrainState:
+        """Adopt a new worker membership mid-run: re-partition the
+        TrainState through the strategy, rebuild the jitted updates for
+        the new W-shaped inputs, and re-place on the (possibly rebuilt)
+        mesh.  Called from fit() at update boundaries when a membership
+        poll reports a change, and from resume when the checkpoint was
+        saved at a different W."""
+        if w_new == getattr(self.strategy, "n_workers", w_new):
+            return state
+        t0 = time.perf_counter()
+        state = self.strategy.resize(state, w_new)
+        self._build_updates()
+        state = self._place(state)
+        self.resize_stats["count"] += 1
+        self.resize_stats["seconds"] += time.perf_counter() - t0
+        return state
+
     def _save(self, state: TrainState, consumed: int):
-        self.checkpoint.save(int(state.step), state.to_dict(),
-                             meta={"consumed": consumed})
+        meta = {"consumed": consumed}
+        w = getattr(self.strategy, "n_workers", None)
+        if w is not None:
+            meta["n_workers"] = int(w)
+        self.checkpoint.save(int(state.step), state.to_dict(), meta=meta)
 
     def _try_resume(self, state: TrainState):
-        """-> (state, consumed) from the latest checkpoint, or None."""
+        """-> (state, consumed) from the latest checkpoint, or None.
+
+        Cross-W resume: when the checkpoint's saved membership differs
+        from the strategy's current W, the load template is first
+        resized to the *saved* W (load_tree is strict about shapes),
+        then the loaded state is resized back to the current W — so a
+        W=4 save resumes on a W=2 fleet with residuals folded
+        sum-preservingly and BMUF replicas re-stacked."""
         if self.checkpoint is None:
             return None
-        try:
-            tree, step = self.checkpoint.load(state.to_dict())
-        except FileNotFoundError:
+        step = self.checkpoint.latest()
+        if step is None:
             return None
         meta = self.checkpoint.load_meta(step) or {}
+        cur_w = getattr(self.strategy, "n_workers", None)
+        saved_w = meta.get("n_workers")
+        if (cur_w is not None and saved_w is not None
+                and int(saved_w) != int(cur_w)
+                and hasattr(self.strategy, "resize")):
+            template = self.strategy.resize(state, int(saved_w))
+            tree, step = self.checkpoint.load(template.to_dict(), step)
+            loaded = TrainState.from_dict(tree)
+            return (self.resize(loaded, cur_w),
+                    int(meta.get("consumed", 0)))
+        tree, step = self.checkpoint.load(state.to_dict(), step)
         return (self._place(TrainState.from_dict(tree)),
                 int(meta.get("consumed", 0)))
 
@@ -108,12 +160,15 @@ class Trainer:
     def fit(self, state: TrainState, source: DataSource, *,
             resume: bool = True,
             max_updates: Optional[int] = None,
-            prefetch: Optional[int] = None) -> TrainState:
+            prefetch: Optional[int] = None,
+            membership=None) -> TrainState:
         consumed = 0
         if resume:
             loaded = self._try_resume(state)
             if loaded is not None:
                 state, consumed = loaded
+        if membership is not None:
+            state = self._poll_membership(state, membership)
         depth = self.prefetch if prefetch is None else prefetch
         wrapped = None
         if depth:
@@ -125,13 +180,24 @@ class Trainer:
                                            skip_put=consumed)
             wrapped = source
         try:
-            return self._fit_loop(state, source, consumed, max_updates)
+            return self._fit_loop(state, source, consumed, max_updates,
+                                  membership)
         finally:
             if wrapped is not None:         # early exit must not leak the
                 wrapped.close()             # producer thread across stages
 
+    def _poll_membership(self, state: TrainState, membership) -> TrainState:
+        """One membership check (anything with live_count()); a changed
+        live count resizes state + strategy + updates.  The floor is 1:
+        an all-dead fleet freezes rather than divides by zero."""
+        live = max(1, int(membership.live_count()))
+        if live != getattr(self.strategy, "n_workers", live):
+            state = self.resize(state, live)
+        return state
+
     def _fit_loop(self, state: TrainState, source, consumed: int,
-                  max_updates: Optional[int]) -> TrainState:
+                  max_updates: Optional[int],
+                  membership=None) -> TrainState:
         # step is mirrored on the host (updates are +1 each) so the loop
         # never blocks on the device unless a sink/checkpoint needs to
         step = start_step = int(state.step)
@@ -183,6 +249,14 @@ class Trainer:
                 self._save(state, consumed)
             if max_updates is not None and step - start_step >= max_updates:
                 break
+            if membership is not None:
+                # update == block boundary: the only membership-safe
+                # point (BMUF lanes have just been re-broadcast, GTC
+                # residuals are between compressions)
+                new = self._poll_membership(state, membership)
+                if new is not state:
+                    state = new
+                    need = self.strategy.microbatches
         return state
 
     # ------------------------------------------------------------ finish

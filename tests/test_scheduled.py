@@ -55,3 +55,57 @@ def test_offsets_rotate():
 def test_describe():
     txt = scheduled.describe(scheduled.ScheduleConfig.paper_100k())
     assert "sub-epoch" in txt and "full-seq" in txt
+
+
+# ===================================== interleaving property tests
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # [test] extra absent: deterministic shim
+    from _hypothesis_fallback import given, settings, st
+
+import dataclasses
+
+
+@settings(max_examples=40, deadline=None)
+@given(every=st.integers(1, 18), until=st.integers(0, 18))
+def test_paper_1m_interleaving_invariants(every, until):
+    """The paper-1M schedule keeps its structural contract under ANY
+    labeled interleave period and chunked/full-sequence switch point —
+    the wave driver re-derives schedules per wave, so these invariants
+    must hold away from the published (5, 15) setting too."""
+    cfg = dataclasses.replace(scheduled.ScheduleConfig.paper_1m(),
+                              labeled_every=every, chunked_until=until)
+    ph = scheduled.phases(cfg)
+    n = cfg.n_sub_epochs
+    unl = [p for p in ph if p.kind == "unlabeled"]
+    lab = [p for p in ph if p.kind == "labeled"]
+
+    # every sub-epoch appears exactly once, in order
+    assert [p.sub_epoch for p in unl] == list(range(1, n + 1))
+    # labeled passes: every `every`-th sub-epoch, plus always the final
+    assert [p.sub_epoch for p in lab] == sorted(
+        {se for se in range(1, n + 1) if se % every == 0} | {n})
+    # a labeled pass immediately follows its own unlabeled sub-epoch
+    for p in lab:
+        i = ph.index(p)
+        assert ph[i - 1].kind == "unlabeled"
+        assert ph[i - 1].sub_epoch == p.sub_epoch
+    # the chunked->full-sequence switch happens exactly once, at `until`
+    for p in ph:
+        assert p.chunked == (p.sub_epoch <= until)
+    # lr: exponential decay per sub-epoch; labeled boosted off its own
+    # sub-epoch's lr
+    for p in unl:
+        assert p.lr == pytest.approx(
+            cfg.lr0 * cfg.lr_decay ** (p.sub_epoch - 1))
+    for p in lab:
+        assert p.lr == pytest.approx(
+            cfg.lr0 * cfg.lr_decay ** (p.sub_epoch - 1)
+            * cfg.labeled_lr_boost)
+    # feature offsets rotate over labeled passes in order
+    assert [p.feature_offset for p in lab] == [
+        i % cfg.n_feature_offsets for i in range(len(lab))]
+    # hours bookkeeping survives the re-interleave
+    assert sum(p.hours for p in unl) == n * cfg.sub_epoch_hours
+    assert all(p.hours == cfg.labeled_hours for p in lab)
